@@ -1,0 +1,47 @@
+"""Didi-style concurrent route queries: many SSSP jobs on one road network.
+
+The paper's motivating workload (9B route plans/day = thousands of
+concurrent shortest-path queries on the same graph).  Demonstrates:
+  * min-plus semiring jobs sharing one weighted-graph view
+  * the Pallas multi-job kernel path (use_pallas=True, interpret on CPU)
+  * the fused on-device scheduler (beyond-paper) vs the faithful host one
+
+  PYTHONPATH=src python examples/concurrent_route_queries.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.algorithms import SSSP
+from repro.core import ConcurrentEngine, make_run
+from repro.graph import grid_graph
+
+
+def main():
+    side = 40
+    csr = grid_graph(side, weighted=True, w_max=5.0, seed=2)
+    sources = [0, 39, 40 * 39, 40 * 40 - 1, 820, 1234]  # corners + interior
+    algs = [SSSP(source=s) for s in sources]
+    print(f"road grid {side}x{side}: {csr.n} vertices, {csr.nnz} edges; "
+          f"{len(algs)} concurrent route queries")
+
+    for name, kwargs, runner in (
+            ("faithful host scheduler", {}, "run_two_level"),
+            ("pallas multi-job kernel", {"use_pallas": True}, "run_two_level"),
+            ("fused on-device (beyond-paper)", {}, "run_fused"),
+    ):
+        run = make_run(algs, csr, block_size=64)
+        eng = ConcurrentEngine(run, seed=0, **kwargs)
+        t0 = time.time()
+        m = getattr(eng, runner)(max_supersteps=50000)
+        dt = time.time() - t0
+        res = eng.results()
+        assert m.converged
+        print(f"{name:32s} supersteps={m.supersteps:5d} "
+              f"tile_loads={m.tile_loads:6d} wall={dt:6.2f}s "
+              f"dist(corner->corner)={res[0][csr.n - 1]:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's two-level scheduling on concurrent graph jobs.
+
+Runs 6 concurrent jobs (1 global PageRank + 5 personalized PageRanks) over
+one shared RMAT graph and compares the paper's schedule (CAJS+MPDS) against
+the independent-scheduling baseline (the paper's Fig. 3 "current mode").
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.algorithms import PageRank, PersonalizedPageRank
+from repro.core import ConcurrentEngine, make_run
+from repro.graph import rmat_graph
+
+
+def main():
+    csr = rmat_graph(2000, 8, seed=1)
+    algs = [PageRank()] + [PersonalizedPageRank(source=s)
+                           for s in (3, 77, 500, 999, 1500)]
+    print(f"graph: {csr.n} vertices, {csr.nnz} edges; "
+          f"{len(algs)} concurrent jobs share it")
+
+    # the paper's schedule: per-job DO queues -> global queue -> one VMEM
+    # staging of each selected block serves every job (CAJS)
+    run = make_run(algs, csr, block_size=64)
+    eng = ConcurrentEngine(run, seed=0)
+    m2 = eng.run_two_level(max_supersteps=50000)
+    res = eng.results()
+
+    # baseline: each job schedules and stages blocks independently
+    run_i = make_run(algs, csr, block_size=64)
+    mi = ConcurrentEngine(run_i, seed=0).run_independent(max_supersteps=50000)
+
+    print(f"two-level : supersteps={m2.supersteps:5d} "
+          f"tile_loads={m2.tile_loads:7d} converged={m2.converged}")
+    print(f"independent: supersteps={mi.supersteps:5d} "
+          f"tile_loads={mi.tile_loads:7d} converged={mi.converged}")
+    print(f"memory-access-redundancy saving: "
+          f"{mi.tile_loads / max(m2.tile_loads, 1):.2f}x fewer stagings")
+
+    top = np.argsort(-res[0])[:5]
+    print("global PageRank top-5 vertices:", top.tolist())
+    for j, s in enumerate((3, 77, 500, 999, 1500), start=1):
+        assert res[j][s] >= np.median(res[j]), "PPR mass should favor source"
+    print("all jobs converged to sane fixpoints: OK")
+
+
+if __name__ == "__main__":
+    main()

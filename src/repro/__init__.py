@@ -1,0 +1,16 @@
+"""repro: Two-Level Scheduling for Concurrent Graph Processing (CS.DC 2018) on TPU/JAX.
+
+Layers:
+  repro.core        - the paper's contribution: MPDS + CAJS two-level scheduling
+  repro.graph       - blocked graph substrate
+  repro.algorithms  - delta-based accumulative graph algorithms
+  repro.kernels     - Pallas TPU kernels (multi-job block SpMM, priority pairs)
+  repro.models      - assigned LM architecture zoo
+  repro.configs     - architecture configs (full + smoke)
+  repro.train       - optimizer / training loop / checkpoint substrate
+  repro.serve       - prefill/decode engine + concurrent request scheduler
+  repro.dist        - sharding rules, fault tolerance, compression, pipeline
+  repro.launch      - production mesh, dry-run, drivers
+"""
+
+__version__ = "0.1.0"

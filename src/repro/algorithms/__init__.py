@@ -1,0 +1,9 @@
+from repro.algorithms.base import Algorithm, PLUS_TIMES, MIN_PLUS
+from repro.algorithms.pagerank import PageRank, PersonalizedPageRank, Katz
+from repro.algorithms.sssp import SSSP, BFS, WCC
+
+__all__ = [
+    "Algorithm", "PLUS_TIMES", "MIN_PLUS",
+    "PageRank", "PersonalizedPageRank", "Katz",
+    "SSSP", "BFS", "WCC",
+]

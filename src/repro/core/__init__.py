@@ -1,0 +1,20 @@
+"""The paper's primary contribution: two-level scheduling (MPDS + CAJS)."""
+
+from repro.core.priority import block_pairs, cbp, do_score, EPS_FACTOR
+from repro.core.do_select import do_select, DEFAULT_SAMPLES
+from repro.core.global_q import global_queue, DEFAULT_ALPHA
+from repro.core.engine import (
+    ConcurrentEngine, ConcurrentRun, RunMetrics, make_run,
+    optimal_queue_length, push_plus_one, push_min_one, compute_pairs,
+)
+from repro.core.api import (initPtable, De_In_Priority, De_Gl_Priority,
+                            Con_processing)
+
+__all__ = [
+    "block_pairs", "cbp", "do_score", "EPS_FACTOR",
+    "do_select", "DEFAULT_SAMPLES",
+    "global_queue", "DEFAULT_ALPHA",
+    "ConcurrentEngine", "ConcurrentRun", "RunMetrics", "make_run",
+    "optimal_queue_length", "push_plus_one", "push_min_one", "compute_pairs",
+    "initPtable", "De_In_Priority", "De_Gl_Priority", "Con_processing",
+]

@@ -1,0 +1,63 @@
+"""The paper's user-facing API (§4.4), mapped onto the engine.
+
+  initPtable     - per-block initial priority state for a newly-arrived job
+  De_In_Priority - per-job block priority queue (pairs + Function 2)
+  De_Gl_Priority - global priority queue (Fig. 7 synthesis)
+  Con_processing - schedule all jobs over the global queue (CAJS push)
+
+These are thin, composable wrappers so a "traditional" engine can adopt the
+two strategies incrementally, exactly as the paper prescribes.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.algorithms.base import Algorithm
+from repro.core.do_select import do_select, DEFAULT_SAMPLES
+from repro.core.engine import (ConcurrentRun, compute_pairs, push_plus_one,
+                               push_min_one, optimal_queue_length)
+from repro.core.global_q import global_queue, DEFAULT_ALPHA
+from repro.algorithms.base import PLUS_TIMES
+
+import jax
+
+
+def initPtable(alg: Algorithm, graph) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Initial (values, deltas) for a new job — every block starts with the
+    same priority (paper step 2: 'priority values ... set to the same in the
+    first iteration'), which falls out of the algorithm's uniform init."""
+    return alg.init(graph)
+
+
+def De_In_Priority(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray,
+                   q: int, rng: np.random.Generator,
+                   samples: int = DEFAULT_SAMPLES) -> List[np.ndarray]:
+    """Per-job priority queues for stacked [J, B_N, Vb] state."""
+    node_un, p_mean = map(np.asarray, compute_pairs(alg, values, deltas))
+    return [do_select(node_un[j], p_mean[j], q, rng, samples)
+            for j in range(values.shape[0])]
+
+
+def De_Gl_Priority(job_queues: Sequence[np.ndarray], num_blocks: int, q: int,
+                   alpha: float = DEFAULT_ALPHA) -> np.ndarray:
+    return global_queue(job_queues, num_blocks, q, alpha)
+
+
+def Con_processing(run: ConcurrentRun, gq: np.ndarray, q: int):
+    """CAJS: stage each selected block once; every job processes it."""
+    g = run.graph
+    push = (push_plus_one if run.algs[0].semiring == PLUS_TIMES
+            else push_min_one)
+    sel = np.zeros(q, dtype=np.int32)
+    msk = np.zeros(q, dtype=np.float32)
+    sel[:len(gq)] = gq[:q]
+    msk[:len(gq)] = 1.0
+    values, deltas = jax.jit(jax.vmap(
+        push, in_axes=(0, 0, None, None, None, None, 0)))(
+        run.values, run.deltas, g.tiles, g.nbr_ids,
+        jnp.asarray(sel), jnp.asarray(msk), run.push_scale)
+    return values, deltas

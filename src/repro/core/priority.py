@@ -1,0 +1,97 @@
+"""Block priority pairs <Node_un, P_mean> and the CBP comparator (Function 1).
+
+Paper §4.2.1: the priority of a block is the pair
+  Node_un  = number of unconverged vertices in the block
+  P_mean   = mean priority value over the *unconverged* vertices (Eq. 1)
+
+Function 1 (CBP) compares two pairs: higher mean wins, unless the means are
+within the epsilon band (eps = 0.2 * P_mean_a, the paper's default), in which
+case the *total* priority Node_un * P_mean decides.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+EPS_FACTOR = 0.2  # paper: eps = 0.2 * P_mean_a
+
+
+# --------------------------------------------------------------------------
+# device-side pair computation
+# --------------------------------------------------------------------------
+
+def block_pairs(vertex_priority: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[..., B_N, Vb] positive priorities (0 == converged) ->
+    (node_un [..., B_N] float32, p_mean [..., B_N] float32)."""
+    un = vertex_priority > 0.0
+    node_un = jnp.sum(un, axis=-1).astype(jnp.float32)
+    p_sum = jnp.sum(jnp.where(un, vertex_priority, 0.0), axis=-1)
+    p_mean = p_sum / jnp.maximum(node_un, 1.0)
+    return node_un, p_mean
+
+
+# --------------------------------------------------------------------------
+# Function 1: CBP — host scalar comparator, verbatim from the paper
+# --------------------------------------------------------------------------
+
+def cbp(pair_a: Tuple[float, float], pair_b: Tuple[float, float],
+        eps_factor: float = EPS_FACTOR) -> bool:
+    """Is the priority of block a higher than block b?
+
+    pair = (node_un, p_mean).  Transcribes the paper's Function 1 exactly,
+    including the swap/negate structure.
+    """
+    (n_a, m_a), (n_b, m_b) = pair_a, pair_b
+    state = True
+    if m_a < m_b:
+        (n_a, m_a), (n_b, m_b) = (n_b, m_b), (n_a, m_a)
+        state = not state
+    # invariant: m_a >= m_b
+    if n_a < n_b:
+        if (m_a - m_b) < eps_factor * m_a and (m_a * n_a) < (m_b * n_b):
+            state = not state
+    return state
+
+
+def cbp_key_sort(node_un: np.ndarray, p_mean: np.ndarray) -> np.ndarray:
+    """Sort block indices in CBP-descending order (host, exact).
+
+    Uses functools.cmp_to_key over Function 1 — O(B log B) comparisons, used
+    only on already-selected ~q blocks (Function 2 keeps the full pass O(B)).
+    """
+    import functools
+
+    idx = list(range(len(node_un)))
+
+    def cmp(i: int, j: int) -> int:
+        if i == j:
+            return 0
+        return -1 if cbp((node_un[i], p_mean[i]), (node_un[j], p_mean[j])) else 1
+
+    idx.sort(key=functools.cmp_to_key(cmp))
+    return np.asarray(idx, dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# device-side DO-order score (beyond-paper fused scheduler)
+# --------------------------------------------------------------------------
+
+def do_score(node_un: jnp.ndarray, p_mean: jnp.ndarray) -> jnp.ndarray:
+    """Scalar score whose descending order approximates CBP order.
+
+    CBP is lexicographic-with-band: P_mean decides unless two means are
+    within 20%, then total = node_un * p_mean decides.  We bucket log(P_mean)
+    with bucket width ln(1.25) (values within the paper's 0.8 ratio band fall
+    in the same or adjacent bucket) and break ties inside a bucket by the
+    normalized total priority.  Converged blocks (node_un == 0) score -inf.
+    """
+    total = node_un * p_mean
+    bucket = jnp.floor(jnp.log(jnp.maximum(p_mean, 1e-30)) / jnp.log(1.25))
+    # total / (total + 1) in (0, 1) keeps the tiebreak strictly inside a bucket
+    tiebreak = total / (total + 1.0)
+    score = bucket + tiebreak
+    return jnp.where(node_un > 0, score, -jnp.inf)

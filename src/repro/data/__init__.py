@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, PackedFileDataset, Prefetcher
+
+__all__ = ["SyntheticTokens", "PackedFileDataset", "Prefetcher"]

@@ -1,0 +1,12 @@
+from repro.graph.structure import CSRGraph, BlockedGraph, build_blocked
+from repro.graph.generators import rmat_graph, uniform_graph, chain_graph, grid_graph
+
+__all__ = [
+    "CSRGraph",
+    "BlockedGraph",
+    "build_blocked",
+    "rmat_graph",
+    "uniform_graph",
+    "chain_graph",
+    "grid_graph",
+]

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   mj_spmm        - multi-job block SpMM (CAJS in hardware: one VMEM-staged
+#                    adjacency tile serves all J jobs; plus-times on the MXU,
+#                    min-plus on the VPU)
+#   priority_pairs - fused <Node_un, P_mean> pair reduction per (job, block)
+# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
+# ref.py (pure-jnp oracle).

@@ -1,0 +1,4 @@
+from repro.kernels.mj_spmm.ops import mj_spmm, push_shared
+from repro.kernels.mj_spmm.ref import mj_spmm_ref
+
+__all__ = ["mj_spmm", "mj_spmm_ref", "push_shared"]

@@ -1,0 +1,74 @@
+"""Multi-job block SpMM Pallas kernel (the paper's CAJS, in hardware).
+
+Semantics (plus-times):   out[i, k, j, w] = sum_v d[i, j, v] * t[i, k, v, w]
+Semantics (min-plus):     out[i, k, j, w] = min_v (d[i, j, v] + t[i, k, v, w])
+
+Grid: (q, K, J/Jb).  The adjacency tile t[i, k] (Vb x Vb) is staged into VMEM
+once per (i, k) and *revisited* across the inner j-grid dimension — Pallas
+keeps a block resident when its index_map output is unchanged, so the tile is
+fetched from HBM exactly once while every job chunk streams against it.
+That is the paper's "jobs access the same data in Cache simultaneously",
+restated for the HBM->VMEM hierarchy.
+
+plus-times runs on the MXU ([Jb, Vb] @ [Vb, Vb] matmul); min-plus has no MXU
+analogue (no min-plus systolic array) and runs on the VPU with an explicit
+per-job row loop to bound VMEM temporaries at Vb*Vb.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plus_kernel(d_ref, t_ref, o_ref):
+    d = d_ref[0]                    # [Jb, Vb]
+    t = t_ref[0, 0]                 # [Vb, Vb]
+    o_ref[0, 0] = jnp.dot(d, t, preferred_element_type=jnp.float32)
+
+
+def _min_kernel(d_ref, t_ref, o_ref):
+    t = t_ref[0, 0]                 # [Vb, Vb]
+    jb = d_ref.shape[1]
+
+    def body(j, _):
+        row = d_ref[0, j, :]                          # [Vb]
+        o_ref[0, 0, j, :] = jnp.min(row[:, None] + t, axis=0)
+        return 0
+
+    jax.lax.fori_loop(0, jb, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "job_block",
+                                             "interpret"))
+def mj_spmm_call(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray, *,
+                 semiring: str = "plus_times",
+                 job_block: int | None = None,
+                 interpret: bool = True) -> jnp.ndarray:
+    """d_sel [q, J, Vb] f32, tiles_sel [q, K, Vb, Vb] f32 -> [q, K, J, Vb]."""
+    q, j, vb = d_sel.shape
+    _, k, vb2, vb3 = tiles_sel.shape
+    assert vb == vb2 == vb3, (d_sel.shape, tiles_sel.shape)
+    jb = job_block or j
+    assert j % jb == 0, f"J={j} not divisible by job_block={jb}"
+    kernel = _plus_kernel if semiring == "plus_times" else _min_kernel
+
+    grid = (q, k, j // jb)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # delta rows: resident per (i, jt); constant across k (inner
+            # revisit) — one HBM fetch per job chunk per selected block
+            pl.BlockSpec((1, jb, vb), lambda i, kk, jt: (i, jt, 0)),
+            # adjacency tile: one HBM fetch per (i, k), shared by all jobs
+            pl.BlockSpec((1, 1, vb, vb), lambda i, kk, jt: (i, kk, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, jb, vb),
+                               lambda i, kk, jt: (i, kk, jt, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, k, j, vb), jnp.float32),
+        interpret=interpret,
+    )(d_sel, tiles_sel)

@@ -1,0 +1,97 @@
+"""Jit wrappers around the mj_spmm kernel + a kernel-backed engine push.
+
+`push_shared` mirrors `repro.core.engine` shared-mode push exactly, but the
+contribution compute (the hot loop) goes through the Pallas kernel; the
+fold/consume/scatter bookkeeping stays in jnp (cheap, bandwidth-bound on
+state vectors, not on adjacency tiles).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mj_spmm.kernel import mj_spmm_call
+
+# VMEM budget (bytes) used to pick the job-chunk size on real TPU; in
+# interpret mode it only shapes the grid.
+_VMEM_BUDGET = 12 * 2**20
+
+
+def _pick_job_block(j: int, vb: int) -> int:
+    # tile (Vb^2) + temp (Vb^2, min-plus) + 2 * job chunk (Jb*Vb), fp32
+    fixed = 2 * vb * vb * 4
+    per_job = 2 * vb * 4
+    budget = max(_VMEM_BUDGET - fixed, per_job)
+    jb = max(1, min(j, budget // per_job))
+    while j % jb:
+        jb -= 1
+    return jb
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mj_spmm(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray,
+            semiring: str = "plus_times",
+            interpret: bool | None = None) -> jnp.ndarray:
+    """d_sel [q, J, Vb], tiles_sel [q, K, Vb, Vb] -> contribs [q, K, J, Vb]."""
+    q, j, vb = d_sel.shape
+    jb = _pick_job_block(j, vb)
+    if interpret is None:
+        interpret = default_interpret()
+    return mj_spmm_call(d_sel.astype(jnp.float32),
+                        tiles_sel.astype(jnp.float32),
+                        semiring=semiring, job_block=jb, interpret=interpret)
+
+
+def push_shared(values: jnp.ndarray, deltas: jnp.ndarray,
+                tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
+                sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
+                push_scale: jnp.ndarray, *, semiring: str = "plus_times",
+                interpret: bool | None = None):
+    """Kernel-backed CAJS push. values/deltas [J, B_N, Vb]; returns updated."""
+    j, bn, vb = values.shape
+    q = sel_ids.shape[0]
+    consumed = jnp.zeros((bn,), jnp.bool_).at[sel_ids].max(sel_mask > 0)
+    consumed = consumed[None, :, None]
+    t_sel = tiles[sel_ids]                       # [q, K, Vb, Vb]
+    nbr_sel = nbr_ids[sel_ids]                   # [q, K]
+
+    if semiring == "plus_times":
+        raw = jnp.where(consumed, deltas, 0.0)
+        d_sel = (raw[:, sel_ids, :] * push_scale[:, None, None]
+                 * sel_mask[None, :, None])      # [J, q, Vb]
+        contrib = mj_spmm(jnp.swapaxes(d_sel, 0, 1), t_sel,
+                          semiring, interpret)   # [q, K, J, Vb]
+        values = values + raw
+        deltas = deltas - raw
+        dst = nbr_sel.reshape(-1)
+        upd = jnp.transpose(contrib, (2, 0, 1, 3)).reshape(j, -1, vb)
+        deltas = deltas.at[:, dst, :].add(upd)
+        return values, deltas
+
+    # min-plus
+    d_sel = jnp.where(consumed, deltas, jnp.inf)[:, sel_ids, :]
+    d_sel = jnp.where(sel_mask[None, :, None] > 0, d_sel, jnp.inf)
+    deltas = jnp.where(consumed, jnp.inf, deltas)
+    contrib = mj_spmm(jnp.swapaxes(d_sel, 0, 1), t_sel,
+                      semiring, interpret)       # [q, K, J, Vb]
+
+    def body(carry, inp):
+        values, deltas = carry
+        c_k, dst_k = inp                          # [q, J, Vb], [q]
+        c_k = jnp.swapaxes(c_k, 0, 1)             # [J, q, Vb]
+        old = values[:, dst_k, :]
+        values = values.at[:, dst_k, :].min(c_k)
+        new = values[:, dst_k, :]
+        improved = new < old
+        deltas = deltas.at[:, dst_k, :].min(
+            jnp.where(improved, new, jnp.inf))
+        return (values, deltas), None
+
+    (values, deltas), _ = jax.lax.scan(
+        body, (values, deltas),
+        (jnp.swapaxes(contrib, 0, 1), jnp.swapaxes(nbr_sel, 0, 1)))
+    return values, deltas

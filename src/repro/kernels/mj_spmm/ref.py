@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the multi-job block SpMM kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mj_spmm_ref(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray,
+                semiring: str = "plus_times") -> jnp.ndarray:
+    """d_sel [q, J, Vb], tiles_sel [q, K, Vb, Vb] -> [q, K, J, Vb]."""
+    if semiring == "plus_times":
+        return jnp.einsum("qjv,qkvw->qkjw", d_sel, tiles_sel,
+                          preferred_element_type=jnp.float32)
+    # min-plus
+    return jnp.min(d_sel[:, None, :, :, None] + tiles_sel[:, :, None, :, :],
+                   axis=3)

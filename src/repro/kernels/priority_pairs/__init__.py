@@ -1,0 +1,4 @@
+from repro.kernels.priority_pairs.ops import priority_pairs
+from repro.kernels.priority_pairs.ref import priority_pairs_ref
+
+__all__ = ["priority_pairs", "priority_pairs_ref"]

@@ -1,0 +1,44 @@
+"""Fused <Node_un, P_mean> pair reduction (paper Eq. 1) as a Pallas kernel.
+
+One pass over the per-vertex priority array produces both halves of the pair
+for every (job, block) — the MPDS bookkeeping the paper worries about keeping
+"inexpensive".  Grid (J, B_N); each step reduces one [Vb] stripe in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairs_kernel(p_ref, n_ref, m_ref):
+    p = p_ref[0]                         # [1, Vb] (2D for TPU vector units)
+    un = (p > 0.0).astype(jnp.float32)
+    n = jnp.sum(un)
+    s = jnp.sum(p * un)
+    n_ref[0, 0] = n
+    m_ref[0, 0] = s / jnp.maximum(n, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def priority_pairs_call(vertex_priority: jnp.ndarray, *,
+                        interpret: bool = True):
+    """[J, B_N, Vb] f32 -> (node_un [J, B_N], p_mean [J, B_N])."""
+    j, bn, vb = vertex_priority.shape
+    return pl.pallas_call(
+        _pairs_kernel,
+        grid=(j, bn),
+        in_specs=[pl.BlockSpec((1, 1, vb), lambda i, b: (i, b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, b: (i, b)),
+            pl.BlockSpec((1, 1), lambda i, b: (i, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((j, bn), jnp.float32),
+            jax.ShapeDtypeStruct((j, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(vertex_priority)

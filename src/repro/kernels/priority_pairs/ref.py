@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the priority_pairs kernel (== core.priority.block_pairs)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def priority_pairs_ref(vertex_priority: jnp.ndarray):
+    un = vertex_priority > 0.0
+    node_un = jnp.sum(un, axis=-1).astype(jnp.float32)
+    p_sum = jnp.sum(jnp.where(un, vertex_priority, 0.0), axis=-1)
+    p_mean = p_sum / jnp.maximum(node_un, 1.0)
+    return node_un, p_mean

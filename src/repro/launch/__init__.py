@@ -1,0 +1,1 @@
+# launch: production mesh, input specs, dry-run driver, train/serve drivers.

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile EVERY (architecture x input shape) on
+the single-pod (16,16) and multi-pod (2,16,16) production meshes.
+
+Records per cell: per-device memory analysis (proves fit), cost analysis
+(FLOPs/bytes for the roofline), collective inventory (wire bytes with
+while-body trip correction), compile wall time.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh multi    # multi-pod only
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, cell_is_applicable, input_specs  # noqa: F401 (input_specs is the public API)
+from repro.launch import hlo_analysis as H
+from repro.models.config import SHAPES
+
+HBM_PER_CHIP = 16 * 2**30  # v5e
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             accum_steps: int = 1) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.size
+    cell = build_cell(arch, shape_name, mesh, accum_steps=accum_steps)
+    cfg = cell.meta["cfg"]
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    trip = cfg.pattern_cycles if cfg.scan_layers else 1
+    colls = H.parse_collectives(hlo, n_dev, while_trip_count=trip)
+    csum = H.collective_summary(colls)
+    flops_dev = H.parse_dot_flops(hlo)          # per-device, loop-corrected
+    from repro.launch.analytic import cell_flops
+    ana = cell_flops(cfg, cell.shape)
+
+    per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+
+    # exact analytic per-device argument bytes from specs x shardings (the
+    # CPU backend emulates bf16 through f32 for some loop carries, inflating
+    # measured temp ~2x vs real TPU; see EXPERIMENTS.md note)
+    def _local_bytes(spec_tree, shard_tree) -> int:
+        total = 0
+        for s, sh in zip(jax.tree_util.tree_leaves(spec_tree),
+                         jax.tree_util.tree_leaves(
+                             shard_tree, is_leaf=lambda x: hasattr(x, "spec"))):
+            n = 1
+            parts = list(sh.spec) + [None] * (len(s.shape) - len(sh.spec))
+            for dim, ax in zip(s.shape, parts):
+                if ax is None:
+                    n *= dim
+                else:
+                    axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                    k = 1
+                    for a in axes:
+                        k *= mesh.shape[a]
+                    n *= -(-dim // k)
+            total += n * s.dtype.itemsize
+        return total
+
+    arg_analytic = sum(_local_bytes(a, s)
+                       for a, s in zip(cell.args, cell.in_shardings))
+
+    # HBM traffic model: every argument byte read + every output written
+    # (2 x analytic args; state/cache are donated aliases) plus transient
+    # activations streamed through HBM once (XLA temp; its CPU-bf16 f32
+    # inflation ~cancels the second touch).  Lower-bound; see EXPERIMENTS.md.
+    hbm_dev = 2.0 * arg_analytic + float(mem.temp_size_in_bytes)
+    terms = H.roofline_terms(flops_dev, hbm_dev,
+                             csum["total_wire_bytes"])
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "arg_bytes_per_dev": int(mem.argument_size_in_bytes),
+        "temp_bytes_per_dev": int(mem.temp_size_in_bytes),
+        "out_bytes_per_dev": int(mem.output_size_in_bytes),
+        "alias_bytes_per_dev": int(mem.alias_size_in_bytes),
+        "peak_bytes_per_dev": int(per_dev),
+        "arg_bytes_analytic": int(arg_analytic),
+        "fits_16gb": bool(per_dev < HBM_PER_CHIP),
+        "hlo_flops_top": float(cost.get("flops", 0.0)),
+        "hlo_bytes_top": float(cost.get("bytes accessed", 0.0)),
+        "scan_trip": trip,
+        "collectives": {k: (round(v, 1) if isinstance(v, float) else v)
+                        for k, v in csum.items()},
+        "n_hlo_collectives": len(colls),
+        # roofline inputs (per-device, loop-multiplier corrected)
+        "hlo_flops_per_dev": flops_dev,
+        "hbm_bytes_per_dev_est": hbm_dev,
+        "policy": cell.meta.get("policy"),
+        "analytic": ana,
+        "model_flops_ratio": (ana["model_flops"]
+                              / max(flops_dev * n_dev, 1.0)),
+        "roofline": terms,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=configs.ARCH_NAMES)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--append", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else configs.ARCH_NAMES
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            records = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in records}
+
+    for arch in archs:
+        for shape_name in shapes:
+            ok, why = cell_is_applicable(arch, shape_name)
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch, shape_name, mesh_name) in done:
+                    continue
+                if not ok:
+                    records.append({"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_name, "status": "skipped",
+                                    "reason": why})
+                    print(f"SKIP {arch} {shape_name} {mesh_name}: {why}")
+                    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mp)
+                    print(f"OK   {arch:22s} {shape_name:12s} {mesh_name:8s} "
+                          f"compile={rec['compile_s']:7.1f}s "
+                          f"peak={rec['peak_bytes_per_dev']/2**30:6.2f}GiB "
+                          f"fits={rec['fits_16gb']} "
+                          f"wire={rec['collectives']['total_wire_bytes']/2**20:10.1f}MiB")
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(f"FAIL {arch} {shape_name} {mesh_name}: {e}")
+                records.append(rec)
+                os.makedirs(os.path.dirname(args.out), exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(records, f, indent=1)
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors -> {args.out}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,120 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing: re-lower one cell with a named variant (hypothesis)
+and diff the roofline terms against the recorded baseline.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch minicpm-2b --shape train_4k --variant grad_bf16_rs
+"""
+
+import argparse
+import dataclasses
+import json
+
+from repro import configs
+from repro.launch import dryrun as DR
+from repro.models.config import SHAPES
+
+
+# named variants: cfg/cell overrides implementing one hypothesis each
+def variant_overrides(name: str, cfg):
+    """Returns (new_cfg, build_kwargs)."""
+    if name == "baseline":
+        return cfg, {}
+    if name == "accum2":
+        # hypothesis: halving the microbatch halves live remat residuals
+        # (memory term) at <2% collective cost (same grads, one extra loop)
+        return cfg, {"accum_steps": 2}
+    if name == "accum4":
+        return cfg, {"accum_steps": 4}
+    if name == "policy_tp":
+        return cfg, {"policy": "tp"}
+    if name == "policy_dp":
+        return cfg, {"policy": "dp"}
+    if name == "kv_chunk_2k":
+        # hypothesis: larger kv chunks cut per-chunk overheads in prefill
+        return dataclasses.replace(cfg, kv_chunk=2048), {}
+    if name == "q_chunk_1k":
+        return dataclasses.replace(cfg, q_chunk=1024, kv_chunk=2048), {}
+    if name == "q_chunk_2k":
+        return dataclasses.replace(cfg, q_chunk=2048, kv_chunk=4096), {}
+    if name == "q_chunk_4k":
+        return dataclasses.replace(cfg, q_chunk=4096, kv_chunk=8192), {}
+    if name == "bf16_reduce":
+        # hypothesis: XLA all-reduces TP partial sums in the f32 accumulation
+        # dtype; bf16 halves those wire bytes at standard numerics cost
+        return dataclasses.replace(cfg, reduce_dtype="bfloat16"), {}
+    if name == "qkv_sp":
+        # hypothesis: uniform seq-sharded q/k/v keeps attention chunk math
+        # shard-local; collectives collapse to one k/v gather per layer
+        return dataclasses.replace(cfg, qkv_spec="sp"), {}
+    if name == "full_sp":
+        # hypothesis: qkv_sp failed because serve carries gathered back per
+        # layer; with seq-sharded carries too the whole prefill is
+        # sequence-resident (weights gathered FSDP-style, activations local)
+        return dataclasses.replace(cfg, qkv_spec="sp"), {"force_sp": True}
+    if name == "no_remat":
+        # hypothesis: decode/prefill don't backprop; remat only pays off in
+        # training — disabling it removes recompute dots from serve cells
+        return dataclasses.replace(cfg, remat=False), {}
+    if name == "unroll_layers":
+        return dataclasses.replace(cfg, scan_layers=False), {}
+    if name == "dense_expert":
+        # hypothesis (decode): at tiny token counts, computing ALL experts
+        # densely (E x overcompute on a trivial FLOP budget) eliminates the
+        # dispatch machinery entirely — weights are read either way, so the
+        # memory term is unchanged and the collective term collapses
+        return dataclasses.replace(cfg, capacity_factor=float(
+            cfg.n_experts) / max(cfg.top_k, 1)), {}
+    raise ValueError(name)
+
+
+def run(arch: str, shape: str, variant: str, multi_pod: bool = False) -> dict:
+    cfg0 = configs.get(arch)
+    cfg, kwargs = variant_overrides(variant, cfg0)
+    import repro.launch.specs as S
+
+    orig_build = S.build_cell
+
+    def build(a, s, mesh, **kw):
+        kw.update(kwargs)
+        return orig_build(a, s, mesh, cfg=cfg, **kw)
+
+    DR.build_cell = build
+    try:
+        rec = DR.run_cell(arch, shape, multi_pod)
+    finally:
+        DR.build_cell = orig_build
+    rec["variant"] = variant
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--out", default="experiments/hillclimb.json")
+    args = ap.parse_args()
+
+    rec = run(args.arch, args.shape, args.variant)
+    t = rec["roofline"]
+    print(f"{args.arch} {args.shape} [{args.variant}]  "
+          f"compute={t['compute_s']*1e3:.1f}ms memory={t['memory_s']*1e3:.1f}ms "
+          f"collective={t['collective_s']*1e3:.1f}ms dominant={t['dominant']} "
+          f"peak={rec['peak_bytes_per_dev']/2**30:.1f}GiB "
+          f"wire={rec['collectives']['total_wire_bytes']/2**30:.2f}GiB")
+    records = []
+    if os.path.exists(args.out):
+        records = json.load(open(args.out))
+    records.append(rec)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(records, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

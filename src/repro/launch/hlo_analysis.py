@@ -1,0 +1,344 @@
+"""Compiled-HLO analysis: collective inventory (with while-body trip-count
+correction) + roofline terms.
+
+XLA's cost_analysis counts a while (scan) body ONCE, so both FLOPs and
+collective bytes inside the layer scan must be multiplied by the trip count.
+We parse the compiled HLO text: computations reached from a `while` op's
+body/condition get the caller's trip multiplier (the layer-scan count from
+the config); collectives outside loops count once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?[a-z0-9\[\],\{\} *]*\)?)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(type_str: str) -> int:
+    """Sum bytes over all tensors in an HLO type string (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    """Participant count per replica group."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota form [ngroups, group_size]
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return total_devices
+
+
+@dataclasses.dataclass
+class Collective:
+    op: str
+    tensor_bytes: int      # full (global logical) tensor bytes on the op
+    group_size: int
+    multiplier: int        # while-loop trip count product
+    computation: str
+
+    @property
+    def wire_bytes_per_device(self) -> float:
+        """Ring-algorithm bytes crossing each device's links, per op.
+
+        tensor_bytes is the op's OUTPUT in the SPMD-partitioned module, i.e.
+        the per-device local shape:
+          all-gather:      out = full gathered  -> wire = b*(g-1)/g
+          all-reduce:      out = local buffer   -> wire = 2*b*(g-1)/g
+          reduce-scatter:  out = 1/g shard      -> wire = b*(g-1)
+          all-to-all:      out = local buffer   -> wire = b*(g-1)/g
+          collective-permute: one hop           -> wire = b
+        """
+        g = max(self.group_size, 1)
+        b = self.tensor_bytes
+        if self.op == "all-reduce":
+            return 2.0 * b * (g - 1) / g
+        if self.op == "all-gather":
+            return b * (g - 1) / g
+        if self.op == "reduce-scatter":
+            return float(b) * (g - 1)
+        if self.op == "all-to-all":
+            return b * (g - 1) / g
+        return float(b)
+
+
+def _computation_blocks(hlo: str) -> Dict[str, str]:
+    """Split the HLO module text into named computation bodies.
+
+    Computation headers sit at column 0 and end with '{'; ops are indented;
+    a body closes with a column-0 '}'.  Header names may be preceded by
+    ENTRY and '%', and parameter lists can contain nested parens (tuple
+    types), so the name is taken as the token before the first '('.
+    """
+    blocks: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if (stripped.endswith("{") and line[:1] not in (" ", "\t")
+                and "(" in stripped):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            if m:
+                cur_name, cur_lines = m.group(1), []
+                continue
+        if stripped.startswith("}") and line[:1] not in (" ", "\t"):
+            if cur_name is not None:
+                blocks[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = None, []
+            continue
+        if cur_name is not None:
+            cur_lines.append(line)
+    return blocks
+
+
+def _loop_trip_count(cond_text: str) -> int:
+    """Static trip count from a while condition: the integer constant used in
+    the loop-bound compare (i < N).  Falls back to 1 if not found."""
+    consts = {}
+    for m in re.finditer(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)",
+                         cond_text):
+        consts[m.group(1)] = int(m.group(2))
+    trips = []
+    for m in re.finditer(r"compare\(([^)]*)\)[^\n]*direction=(LT|GT|LE|GE)",
+                         cond_text):
+        for operand in m.group(1).split(","):
+            name = operand.strip().lstrip("%")
+            if name in consts:
+                trips.append(consts[name])
+    if trips:
+        return max(trips)
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+def _computation_multipliers(hlo: str, blocks: Dict[str, str]) -> Dict[str, int]:
+    """Effective execution count per computation: product of trip counts of
+    enclosing while loops (handles nesting: layer scan x attention scan)."""
+    # per-block: which computations it calls, and which whiles it contains
+    call_re = re.compile(r"(?:calls=|to_apply=)%?([\w\.\-]+)")
+    while_re = re.compile(r"condition=%?([\w\.\-]+),?\s*body=%?([\w\.\-]+)|"
+                          r"body=%?([\w\.\-]+),?\s*condition=%?([\w\.\-]+)")
+
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in blocks:
+            return
+        if mult.get(name, 0) >= m:  # already visited with >= multiplier
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        text = blocks[name]
+        for wm in while_re.finditer(text):
+            cond = wm.group(1) or wm.group(4)
+            body = wm.group(2) or wm.group(3)
+            trip = _loop_trip_count(blocks.get(cond, ""))
+            visit(cond, m * trip)
+            visit(body, m * trip)
+        for cm in call_re.finditer(text):
+            callee = cm.group(1)
+            visit(callee, m)
+
+    # entry computations: those never called/used as bodies
+    called = set()
+    for text in blocks.values():
+        for cm in call_re.finditer(text):
+            called.add(cm.group(1))
+        for wm in while_re.finditer(text):
+            for g in wm.groups():
+                if g:
+                    called.add(g)
+    roots = [n for n in blocks if n not in called]
+    for r in roots:
+        visit(r, 1)
+    # anything unreached (conservatively) counts once
+    for n in blocks:
+        mult.setdefault(n, 1)
+    return mult
+
+
+def parse_collectives(hlo: str, total_devices: int,
+                      while_trip_count: int = 1) -> List[Collective]:
+    """Inventory every collective with its true execution count: each op is
+    multiplied by the product of trip counts of its enclosing while loops,
+    parsed from the loop-bound compares (while_trip_count is unused, kept
+    for API compatibility)."""
+    del while_trip_count
+    blocks = _computation_blocks(hlo)
+    mults = _computation_multipliers(hlo, blocks)
+
+    out: List[Collective] = []
+    for cname, body in blocks.items():
+        mult = mults.get(cname, 1)
+        for line in body.splitlines():
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            if "-done(" in line:
+                continue  # count start ops only (async pairs)
+            op = m.group(1)
+            # result type: substring between '=' and the op token
+            eq = line.find("=")
+            op_idx = line.find(op, eq)
+            tbytes = _tensor_bytes(line[eq + 1:op_idx]) if eq >= 0 else 0
+            if "-start(" in line and op == "all-gather":
+                # async start returns (operand, result) tuple: halve
+                tbytes //= 2
+            out.append(Collective(op=op, tensor_bytes=tbytes,
+                                  group_size=_group_size(line, total_devices),
+                                  multiplier=mult, computation=cname))
+    return out
+
+
+def collective_summary(colls: List[Collective]) -> Dict[str, float]:
+    by_op: Dict[str, float] = {}
+    total = 0.0
+    for c in colls:
+        wire = c.wire_bytes_per_device * c.multiplier
+        by_op[c.op] = by_op.get(c.op, 0.0) + wire
+        total += wire
+    by_op["total_wire_bytes"] = total
+    by_op["n_ops"] = float(len(colls))
+    return by_op
+
+
+# ---------------------------------------------------------------------------
+# FLOP / HBM-byte estimation with loop multipliers
+# ---------------------------------------------------------------------------
+
+_DOT_RE = re.compile(
+    r"=\s*(?P<out>[\w\[\],\{\} ]+?)\s*dot\(\s*(?P<args>[^)]*)\)"
+    r"[^\n]*lhs_contracting_dims=\{(?P<lc>[\d,]*)\}")
+_CONV_RE = re.compile(r"=\s*(?P<out>[\w\[\],\{\} ]+?)\s*convolution\(")
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+def _op_name_types(args: str) -> List[str]:
+    """Operand list of a dot: '%a, %b' (no types in compiled HLO) or typed."""
+    return [a.strip() for a in args.split(",")]
+
+
+def parse_dot_flops(hlo: str) -> float:
+    """Sum 2*M*N*K over every dot in the module, multiplied by the enclosing
+    while-loop trip product.  Operand shapes are looked up from the operand
+    definitions within the same module text."""
+    blocks = _computation_blocks(hlo)
+    mults = _computation_multipliers(hlo, blocks)
+
+    # map op name -> result dims (global, across computations; names unique)
+    def_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*([^=]+?)\s*"
+                        r"([a-z][\w\-]*)\(")
+    op_shape: Dict[str, List[int]] = {}
+    for line in hlo.splitlines():
+        m = def_re.match(line)
+        if m:
+            _, dims = _shape_dims(m.group(2))
+            op_shape[m.group(1)] = dims
+
+    total = 0.0
+    for cname, body in blocks.items():
+        mult = mults.get(cname, 1)
+        for line in body.splitlines():
+            if " dot(" not in line:
+                continue
+            dm = _DOT_RE.search(line)
+            if not dm:
+                continue
+            _, out_dims = _shape_dims(dm.group("out"))
+            operands = _op_name_types(dm.group("args"))
+            lhs_name = operands[0].lstrip("%") if operands else ""
+            lhs_dims = op_shape.get(lhs_name, [])
+            lc = [int(x) for x in dm.group("lc").split(",") if x]
+            k = 1
+            for ci in lc:
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+            out_n = 1
+            for d in out_dims:
+                out_n *= d
+            total += 2.0 * out_n * k * mult
+    return total
+
+
+def estimate_hbm_bytes(hlo: str) -> float:
+    """Rough HBM traffic: every top-level op result written once (and read
+    ~once downstream), times the loop multiplier.  Fusion internals are
+    invisible (correct: they stay in registers/VMEM); parameters are counted
+    via their get-tuple-element/parameter materializations."""
+    blocks = _computation_blocks(hlo)
+    mults = _computation_multipliers(hlo, blocks)
+    def_re = re.compile(r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*([^=]+?)\s*"
+                        r"[a-z][\w\-]*\(")
+    skip = ("tuple(", "get-tuple-element(", "parameter(", "constant(",
+            "bitcast(", "copy-done(", "all-gather-done(")
+    total = 0.0
+    for cname, body in blocks.items():
+        mult = mults.get(cname, 1)
+        for line in body.splitlines():
+            if any(s in line for s in skip):
+                continue
+            m = def_re.match(line)
+            if not m:
+                continue
+            total += _tensor_bytes(m.group(1)) * mult
+    return 2.0 * total  # write + downstream read
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12         # bf16 per chip
+HBM_BW = 819e9              # bytes/s per chip
+ICI_BW = 50e9               # bytes/s per link (~per device, ring)
+
+
+def roofline_terms(flops_per_dev: float, hbm_bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> Dict[str, float]:
+    """All inputs are per-device quantities (the SPMD module has local
+    shapes), so no further division by chip count:
+    HLO_FLOPs/(chips*peak) == flops_per_dev/peak for balanced sharding."""
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = hbm_bytes_per_dev / HBM_BW
+    collective_s = wire_bytes_per_dev / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

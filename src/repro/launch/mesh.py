@@ -1,0 +1,21 @@
+"""Production meshes.  A FUNCTION (not module-level constant) so importing
+never touches jax device state."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips ("data", "model").
+    Multi-pod:  (2, 16, 16) = 512 chips ("pod", "data", "model")."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"))

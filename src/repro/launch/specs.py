@@ -1,0 +1,207 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input, plus the
+per-cell (step_fn, arg specs, shardings) assembly used by dryrun/roofline.
+
+No device allocation happens here — params/caches come from jax.eval_shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import LM
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.dist.sharding import (ShardingRules, param_shardings,
+                                 batch_shardings, cache_shardings)
+from repro.dist.act import activation_sharding
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import make_train_step
+
+
+def batch_size_per_step(shape: ShapeConfig) -> int:
+    return shape.global_batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """The model-input part of a cell: tokens (+ patch embeddings)."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        s = shape.seq_len
+        text = s - cfg.patch_prefix
+        spec: Dict[str, Any] = {}
+        if cfg.n_codebooks:
+            spec["tokens"] = jax.ShapeDtypeStruct(
+                (b, text, cfg.n_codebooks), jnp.int32)
+        else:
+            spec["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        if cfg.patch_prefix:
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.patch_prefix, cfg.d_model), jnp.bfloat16)
+        return spec
+    if shape.kind == "prefill":
+        s = shape.seq_len
+        text = s - cfg.patch_prefix
+        spec = {}
+        if cfg.n_codebooks:
+            spec["tokens"] = jax.ShapeDtypeStruct(
+                (b, text, cfg.n_codebooks), jnp.int32)
+        else:
+            spec["tokens"] = jax.ShapeDtypeStruct((b, text), jnp.int32)
+        if cfg.patch_prefix:
+            spec["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.patch_prefix, cfg.d_model), jnp.bfloat16)
+        return spec
+    # decode: one new token against a seq_len KV cache
+    if cfg.n_codebooks:
+        return {"tokens": jax.ShapeDtypeStruct((b, 1, cfg.n_codebooks),
+                                               jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Any                  # callable to jit
+    args: Tuple[Any, ...]    # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _state_specs(model: LM):
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    mu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                      params)
+    nu = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                      params)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return {"params": params,
+            "opt": {"mu": mu, "nu": nu, "step": step}}
+
+
+def _replicated(rules: ShardingRules, tree):
+    return jax.tree.map(lambda s: rules.named(s.shape, [None] * s.ndim), tree)
+
+
+def choose_policy(cfg: ModelConfig, shape: ShapeConfig, mesh) -> str:
+    """Pure FSDP-DP for dense train cells whose batch tiles every chip;
+    TP/EP/SP otherwise (MoE needs EP; serving batches don't tile)."""
+    if (shape.kind == "train" and not cfg.moe
+            and shape.global_batch % mesh.size == 0):
+        return "dp"
+    return "tp"
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               cfg: Optional[ModelConfig] = None,
+               accum_steps: int = 1,
+               policy: Optional[str] = None,
+               force_sp: bool = False) -> Cell:
+    """Assemble (fn, specs, shardings) for one (arch x shape) cell."""
+    shape = SHAPES[shape_name]
+    cfg = cfg or configs.get(arch)
+    if shape.kind == "prefill" and cfg.q_chunk < 2048:
+        # adopted from §Perf iteration: SPMD chunk-boundary reshards scale
+        # with chunk count; 2k/4k chunks cut prefill wire bytes 21% at +3%
+        # compute (triangular granularity) and neutral memory
+        cfg = dataclasses.replace(cfg, q_chunk=2048, kv_chunk=4096)
+    model = LM(cfg)
+    policy = policy or choose_policy(cfg, shape, mesh)
+    rules = ShardingRules(mesh, policy)
+
+    serve = shape.kind != "train" and not force_sp
+
+    def _ctx(fn):
+        def wrapped(*a):
+            with activation_sharding(rules, serve=serve):
+                return fn(*a)
+        return wrapped
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(schedule="wsd" if arch == "minicpm-2b"
+                              else "cosine")
+        step_fn = _ctx(make_train_step(model, opt_cfg,
+                                       accum_steps=accum_steps))
+        state = _state_specs(model)
+        batch = input_specs(cfg, shape)
+        p_sh = param_shardings(rules, state["params"])
+        state_sh = {"params": p_sh,
+                    "opt": {"mu": jax.tree.map(lambda s: s, p_sh),
+                            "nu": jax.tree.map(lambda s: s, p_sh),
+                            "step": rules.named((), [])}}
+        batch_sh = batch_shardings(rules, batch)
+        metrics_sh = {"loss": rules.named((), []),
+                      "grad_norm": rules.named((), []),
+                      "lr": rules.named((), [])}
+        return Cell(arch, shape, step_fn, (state, batch),
+                    (state_sh, batch_sh), (state_sh, metrics_sh),
+                    donate=(0,),
+                    meta={"cfg": cfg, "model": model, "policy": policy})
+
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    p_sh = param_shardings(rules, params, serve=True)
+    b = shape.global_batch
+
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(
+            lambda: model.init_cache(batch=b, max_len=shape.seq_len))
+        c_sh = cache_shardings(rules, cache)
+        batch = input_specs(cfg, shape)
+        batch_sh = batch_shardings(rules, batch)
+
+        if cfg.patch_prefix:
+            @_ctx
+            def fn(params, cache, tokens, patch_embeds):
+                return model.prefill(params, tokens, cache, patch_embeds)
+            args = (params, cache, batch["tokens"], batch["patch_embeds"])
+            in_sh = (p_sh, c_sh, batch_sh["tokens"],
+                     batch_sh["patch_embeds"])
+        else:
+            @_ctx
+            def fn(params, cache, tokens):
+                return model.prefill(params, tokens, cache)
+            args = (params, cache, batch["tokens"])
+            in_sh = (p_sh, c_sh, batch_sh["tokens"])
+        logits_sh = rules.named(
+            (b, 1, cfg.vocab_size), ["dp", None, None]
+            ) if not cfg.n_codebooks else rules.named(
+            (b, 1, cfg.n_codebooks, cfg.vocab_size), ["dp", None, None, None])
+        return Cell(arch, shape, fn, args, in_sh, (logits_sh, c_sh),
+                    donate=(1,),
+                    meta={"cfg": cfg, "model": model, "policy": policy})
+
+    # decode
+    cache = jax.eval_shape(
+        lambda: model.init_cache(batch=b, max_len=shape.seq_len))
+    # cache filled to seq_len - 1 (the new token lands at the last slot)
+    c_sh = cache_shardings(rules, cache)
+    batch = input_specs(cfg, shape)
+    batch_sh = batch_shardings(rules, batch)
+
+    @_ctx
+    def fn(params, cache, tokens):
+        return model.decode_step(params, tokens, cache)
+
+    if cfg.n_codebooks:
+        logits_sh = rules.named((b, 1, cfg.n_codebooks, cfg.vocab_size),
+                                ["dp", None, None, None])
+    else:
+        logits_sh = rules.named((b, 1, cfg.vocab_size), ["dp", None, None])
+    return Cell(arch, shape, fn, (params, cache, batch["tokens"]),
+                (p_sh, c_sh, batch_sh["tokens"]), (logits_sh, c_sh),
+                donate=(1,),
+                meta={"cfg": cfg, "model": model, "policy": policy})
+
+
+def cell_is_applicable(arch: str, shape_name: str) -> Tuple[bool, str]:
+    cfg = configs.get(arch)
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 512k dense-causal decode "
+                       "requires sub-quadratic attention (DESIGN.md)")
+    return True, ""

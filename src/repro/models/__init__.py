@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.model import LM
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "LM"]

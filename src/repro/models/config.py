@@ -1,0 +1,121 @@
+"""Model + shape configs for the assigned architecture zoo."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # layer pattern, cycled: "attn", "swa" (sliding-window attn),
+    # "rglru" (Griffin recurrent), "mlstm", "slstm" (xLSTM)
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 4096                  # for "swa"
+
+    # MoE (applies to the FFN of attn/swa blocks)
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    use_rope: bool = True
+
+    # recurrent options
+    d_rnn: int = 0                      # rglru width (0 -> d_model)
+    conv_width: int = 4                 # temporal conv (rglru / mlstm)
+    proj_factor: float = 2.0            # mlstm up-projection factor
+
+    # modality frontends (stubs: precomputed embeddings / token layouts)
+    n_codebooks: int = 0                # musicgen: 4 EnCodec streams
+    patch_prefix: int = 0               # pixtral: precomputed patch embeds
+
+    # substrate
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "silu"
+    param_dtype: str = "bfloat16"
+    # accumulation dtype for the TP-sharded contractions whose partial sums
+    # cross the ICI (wo / w2): bf16 halves the all-reduce wire bytes
+    reduce_dtype: str = "float32"
+    # attention activation layout: "auto" (heads-TP when divisible) or "sp"
+    # (q/k/v sequence-sharded; attention chunks stay shard-local)
+    qkv_spec: str = "auto"
+    scan_layers: bool = True
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    # which serve shapes this arch supports (full attention cannot do 500k)
+    sub_quadratic: bool = False
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def d_rnn_eff(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def pattern_cycles(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def pattern_remainder(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k in ("mlstm", "slstm", "rglru") for k in self.block_pattern)
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, mirrors the init functions)."""
+        from repro.models.model import LM
+        import jax
+        shapes = jax.eval_shape(lambda: LM(self).init(jax.random.PRNGKey(0)))
+        return sum(int(s.size) for s in jax.tree_util.tree_leaves(shapes))
+
+    def n_active_params(self) -> int:
+        """Active-per-token params (MoE counts top_k of n_experts)."""
+        total = self.n_params()
+        if not self.moe:
+            return total
+        from repro.models.model import LM
+        import jax
+        shapes = jax.eval_shape(lambda: LM(self).init(jax.random.PRNGKey(0)))
+        expert = 0
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            if any("experts" in str(p) for p in path):
+                expert += int(leaf.size)
+        active = total - expert + expert * self.top_k // max(self.n_experts, 1)
+        return active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int       # train/prefill: tokens per sequence; decode: KV length
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}

@@ -1,0 +1,178 @@
+"""Core layers: RMSNorm, RoPE, flash (chunked online-softmax) attention,
+SwiGLU MLP.  All activations bf16 with f32 softmax/norm internals."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_tables(positions: jnp.ndarray, head_dim: int,
+                base: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions [..., S] -> (cos, sin) [..., S, head_dim/2] (f32)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(base) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, N, D]; cos/sin [B, S, D/2] (NeoX half-rotation layout)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _attn_chunk_scan(q_c, q_pos_c, k, v, kv_pos, kv_chunk, window, scale):
+    """One q chunk against kv chunks [0, n_kv).  Shapes:
+    q_c [B, qc, KV, G, D]; q_pos_c [B, qc]; k/v [B, Skv, KV, D];
+    kv_pos [B, Skv].  Returns [B, qc, KV, G, D]."""
+    b, qc, kv_h, g, d = q_c.shape
+    skv = k.shape[1]
+    n_kv = skv // kv_chunk
+
+    def body(carry, idx):
+        # slice chunks in-loop (no materialized transpose of the KV cache)
+        m, l, acc = carry
+        off = idx * kv_chunk
+        k_c = jax.lax.dynamic_slice_in_dim(k, off, kv_chunk, axis=1)
+        v_c = jax.lax.dynamic_slice_in_dim(v, off, kv_chunk, axis=1)
+        kp = jax.lax.dynamic_slice_in_dim(kv_pos, off, kv_chunk, axis=1)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q_c, k_c,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kp[:, None, None, None, :] >= 0) & \
+               (kp[:, None, None, None, :] <= q_pos_c[:, None, None, :, None])
+        if window is not None:
+            mask &= kp[:, None, None, None, :] > \
+                (q_pos_c[:, None, None, :, None] - window)
+        s = jnp.where(mask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * mask
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, kv_h, g, qc), _NEG, jnp.float32),
+            jnp.zeros((b, kv_h, g, qc), jnp.float32),
+            jnp.zeros((b, kv_h, g, qc, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_kv))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4)        # [B, qc, KV, G, D]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+                    window: Optional[int] = None,
+                    q_chunk: int = 512, kv_chunk: int = 1024,
+                    triangular: bool = False) -> jnp.ndarray:
+    """Online-softmax attention with positional masking.
+
+    q [B, Sq, H, D]; k/v [B, Skv, KV, D]; q_pos [B, Sq]; kv_pos [B, Skv]
+    (kv_pos < 0 marks invalid cache slots).  `triangular=True` (self-attention
+    where q_pos == kv_pos) statically skips kv chunks above the causal
+    diagonal — half the FLOPs of the full rectangle.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kv_h, _ = k.shape
+    g = h // kv_h
+    scale = 1.0 / math.sqrt(d)
+
+    if sq == 1:
+        # decode fast path: no chunk loop, no dynamic slicing — works
+        # directly on a sequence-sharded KV cache (flash-decoding layout:
+        # XLA partial-softmaxes per shard and combines)
+        qg = q.reshape(b, 1, kv_h, g, d)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qg, k,
+                       preferred_element_type=jnp.float32) * scale
+        mask = (kv_pos[:, None, None, None, :] >= 0) & \
+               (kv_pos[:, None, None, None, :] <=
+                q_pos[:, None, None, :, None])
+        if window is not None:
+            mask &= kv_pos[:, None, None, None, :] > \
+                (q_pos[:, None, None, :, None] - window)
+        s = jnp.where(mask, s, _NEG)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m) * mask
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, 1, h, d).astype(q.dtype)
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+
+    # pad sequences to chunk multiples (padded kv slots get pos = -1)
+    sq_p = -(-sq // qc) * qc
+    skv_p = -(-skv // kc) * kc
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, sq_p - sq)))
+    if skv_p != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, skv_p - skv)),
+                         constant_values=-1)
+
+    qg = q.reshape(b, sq_p, kv_h, g, d)
+    n_q = sq_p // qc
+    outs = []
+    for i in range(n_q):
+        q_c = jax.lax.dynamic_slice_in_dim(qg, i * qc, qc, axis=1)
+        qp_c = jax.lax.dynamic_slice_in_dim(q_pos, i * qc, qc, axis=1)
+        if triangular:
+            # causal self-attention: kv chunks beyond this q chunk's last
+            # position can never be attended — skip them statically
+            hi = min((i + 1) * qc, skv_p)
+            hi = -(-hi // kc) * kc
+        else:
+            hi = skv_p
+        o = _attn_chunk_scan(q_c, qp_c, k[:, :hi], v[:, :hi],
+                             kv_pos[:, :hi], kc, window, scale)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1)[:, :sq]
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w1: jnp.ndarray, w3: jnp.ndarray,
+           w2: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    a = x @ w1
+    a = jax.nn.silu(a) if act == "silu" else jax.nn.gelu(a)
+    return (a * (x @ w3)) @ w2
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * (1.0 / math.sqrt(in_dim))).astype(dtype)

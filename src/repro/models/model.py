@@ -1,0 +1,491 @@
+"""LM: assembles the architecture zoo from block kinds.
+
+Layer stack = `block_pattern` cycled `pattern_cycles` times (scanned, remat)
+plus an unrolled remainder.  One code path serves train (no cache), prefill
+(cache written), and decode (cache read/updated, one token).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import layers as L
+from repro.dist.act import constrain, axis_size
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.recurrent import init_rglru, init_rglru_cache, rglru_block
+from repro.models.xlstm import (init_mlstm, init_mlstm_cache, mlstm_block,
+                                init_slstm, init_slstm_cache, slstm_block)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# attention block
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, kv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.d_ff)
+    ks = jax.random.split(key, 10)
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "wq": L.dense_init(ks[0], d, h * hd, dtype),
+        "wk": L.dense_init(ks[1], d, kv * hd, dtype),
+        "wv": L.dense_init(ks[2], d, kv * hd, dtype),
+        "wo": L.dense_init(ks[3], h * hd, d, dtype),
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    if cfg.moe:
+        p["moe"] = init_moe(ks[4], cfg, dtype)
+    else:
+        p["w1"] = L.dense_init(ks[5], d, f, dtype)
+        p["w3"] = L.dense_init(ks[6], d, f, dtype)
+        p["w2"] = L.dense_init(ks[7], f, d, dtype)
+    return p
+
+
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    dtype) -> dict:
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    if kind == "swa":
+        w = min(cfg.window, max_len)
+        return {
+            "k": jnp.zeros((batch, w, kv, hd), dtype),
+            "v": jnp.zeros((batch, w, kv, hd), dtype),
+            "pos_arr": jnp.full((batch, w), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def _head_norm(x, w, eps):
+    """Per-head RMSNorm over the last (head_dim) axis (qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def attn_block(x, p, cfg: ModelConfig, kind: str, cache: Optional[dict],
+               positions: jnp.ndarray, pos0: Optional[jnp.ndarray]):
+    """x [B,S,D]; positions [B,S]; pos0 = scalar cache fill level (None when
+    training without cache).  Returns (x, new_cache, aux_loss)."""
+    b, s, d = x.shape
+    h_, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    window = cfg.window if kind == "swa" else None
+
+    hnorm = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    q = hnorm @ p["wq"]
+    k = hnorm @ p["wk"]
+    v = hnorm @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    # heads-TP when the head count divides the tp axis; otherwise keep the
+    # query seq-sharded (sequence parallelism) and let SPMD gather k/v.
+    # qkv_spec="sp" forces the uniform sequence layout (prefill: attention
+    # chunks become shard-local instead of re-gathering per chunk)
+    if cfg.qkv_spec == "sp":
+        qspec = kvspec = ("dp", "sp", None, None)
+    elif h_ % max(axis_size("tp"), 1) == 0:
+        qspec = ("dp", None, "tp", None)
+        kvspec = ("dp", None, "tp", None)
+    else:
+        qspec = ("dp", "sp", None, None)
+        kvspec = ("dp", None, "tp", None)
+    q = constrain(q.reshape(b, s, h_, hd), *qspec)
+    k = constrain(k.reshape(b, s, kv, hd), *kvspec)
+    v = constrain(v.reshape(b, s, kv, hd), *kvspec)
+    if cfg.qk_norm:
+        q = _head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _head_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.use_rope:
+        cos, sin = L.rope_tables(positions, hd, cfg.rope_base)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is None:
+        kk, vv, kv_pos = k, v, positions
+        triangular = True
+    else:
+        triangular = False
+        if "pos_arr" in cache:          # sliding-window ring buffer
+            if s > 1:
+                # prefill (fresh cache at pos0): attend in-sequence — never
+                # read the cache, only build the ring for future decode
+                kk, vv, kv_pos = k, v, positions
+                triangular = True
+            else:
+                # decode: attend over (old ring UNION the new token)
+                kk = jnp.concatenate([cache["k"], k], axis=1)
+                vv = jnp.concatenate([cache["v"], v], axis=1)
+                kv_pos = jnp.concatenate([cache["pos_arr"], positions],
+                                         axis=1)
+            w = cache["k"].shape[1]
+            lw = min(s, w)
+            slots = (positions[0, -lw:]) % w          # [lw] (shared layout)
+            ck = cache["k"].at[:, slots].set(k[:, -lw:])
+            cv = cache["v"].at[:, slots].set(v[:, -lw:])
+            cp = cache["pos_arr"].at[:, slots].set(positions[:, -lw:])
+            new_cache = {"k": ck, "v": cv, "pos_arr": cp}
+        else:                            # full causal cache
+            if s == cache["k"].shape[1]:
+                # prefill filling the whole cache: direct assignment (a
+                # traced-offset DUS covering every slot would force SPMD
+                # to replicate the sharded cache)
+                ck, cv = k, v
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, pos0, 1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, pos0, 1)
+            new_cache = {"k": ck, "v": cv}
+            if s > 1:
+                # prefill (fresh cache at pos0): attend in-sequence; the
+                # cache write above never feeds the attention read, so a
+                # sequence-sharded cache layout stays slice-free
+                kk, vv, kv_pos = k, v, positions
+                triangular = True
+            else:
+                max_len = ck.shape[1]
+                row = jnp.arange(max_len, dtype=jnp.int32)
+                valid = row < (pos0 + s)
+                kv_pos = jnp.broadcast_to(jnp.where(valid, row, -1),
+                                          (b, max_len))
+                kk, vv = ck, cv
+
+    o = L.flash_attention(q, kk, vv, positions, kv_pos, window=window,
+                          q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                          triangular=triangular)
+    acc_t = jnp.bfloat16 if cfg.reduce_dtype == "bfloat16" else jnp.float32
+    wo_out = jax.lax.dot_general(
+        o.reshape(b, s, h_ * hd), p["wo"], (((2,), (0,)), ((), ())),
+        preferred_element_type=acc_t).astype(x.dtype)
+    x = x + wo_out
+    # sequence-parallel residual stream: the scan carry (saved per cycle by
+    # remat) is sharded over the tp axis on the sequence dim
+    x = constrain(x, "dp", "sp", None)
+
+    h2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if cfg.moe:
+        ffn, aux = moe_ffn(h2, p["moe"], cfg)
+    else:
+        h1 = jax.nn.silu(h2 @ p["w1"]) if cfg.act == "silu" \
+            else jax.nn.gelu(h2 @ p["w1"])
+        h1 = constrain(h1, "dp", None, "tp")
+        ffn = jax.lax.dot_general(
+            h1 * (h2 @ p["w3"]), p["w2"], (((2,), (0,)), ((), ())),
+            preferred_element_type=acc_t).astype(x.dtype)
+        aux = jnp.float32(0.0)
+    x = x + ffn
+    return constrain(x, "dp", "sp", None), new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# block dispatch
+# ---------------------------------------------------------------------------
+
+_INIT = {"attn": init_attn_block, "swa": init_attn_block,
+         "rglru": init_rglru, "mlstm": init_mlstm, "slstm": init_slstm}
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind in ("attn", "swa"):
+        return init_attn_cache(cfg, kind, batch, max_len, dtype)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    if kind == "mlstm":
+        return init_mlstm_cache(cfg, batch, dtype)
+    if kind == "slstm":
+        return init_slstm_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, x, p, cfg, cache, positions, pos0):
+    if kind in ("attn", "swa"):
+        return attn_block(x, p, cfg, kind, cache, positions, pos0)
+    if kind == "rglru":
+        x, c = rglru_block(x, p, cfg, cache)
+    elif kind == "mlstm":
+        x, c = mlstm_block(x, p, cfg, cache)
+    elif kind == "slstm":
+        x, c = slstm_block(x, p, cfg, cache)
+    else:
+        raise ValueError(kind)
+    return x, c, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ---------------------------------------------------------------
+
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        k_embed, k_blocks, k_rem, k_head = jax.random.split(key, 4)
+        pattern = cfg.block_pattern
+        n_cyc, rem = cfg.pattern_cycles, cfg.pattern_remainder
+
+        if cfg.n_codebooks:
+            embed = (jax.random.normal(
+                k_embed, (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+                jnp.float32) * 0.02).astype(dtype)
+        else:
+            embed = (jax.random.normal(
+                k_embed, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(dtype)
+
+        cyc_keys = jax.random.split(k_blocks, max(n_cyc, 1))
+
+        def one_cycle(ck):
+            pks = jax.random.split(ck, len(pattern))
+            return tuple(_INIT[kind](pks[i], cfg, dtype)
+                         for i, kind in enumerate(pattern))
+
+        blocks = jax.vmap(one_cycle)(cyc_keys) if n_cyc else ()
+
+        rem_keys = jax.random.split(k_rem, max(rem, 1))
+        rem_blocks = tuple(_INIT[pattern[i]](rem_keys[i], cfg, dtype)
+                           for i in range(rem))
+
+        params = {
+            "embed": embed,
+            "blocks": blocks,
+            "rem": rem_blocks,
+            "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            if cfg.n_codebooks:
+                params["head"] = (jax.random.normal(
+                    k_head, (cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+                    jnp.float32) * 0.02).astype(dtype)
+            else:
+                params["head"] = L.dense_init(
+                    k_head, cfg.d_model, cfg.vocab_size, dtype)
+        return params
+
+    # -- caches -----------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        pattern = cfg.block_pattern
+        n_cyc, rem = cfg.pattern_cycles, cfg.pattern_remainder
+
+        def stack(kind):
+            one = init_block_cache(cfg, kind, batch, max_len, dtype)
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_cyc,) + a.shape).copy(), one)
+
+        return {
+            "pos": jnp.int32(0),
+            "blocks": tuple(stack(kind) for kind in pattern),
+            "rem": tuple(init_block_cache(cfg, pattern[i], batch, max_len,
+                                          dtype) for i in range(rem)),
+        }
+
+    # -- embedding / head ---------------------------------------------------------
+
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        if cfg.n_codebooks:
+            # tokens [B, S, n_cb]
+            parts = [jnp.take(params["embed"][c], tokens[..., c], axis=0)
+                     for c in range(cfg.n_codebooks)]
+            x = sum(parts)
+        else:
+            x = jnp.take(params["embed"], tokens, axis=0)
+        if patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        return constrain(x, "dp", "sp", None)
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        xf = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.n_codebooks:
+            head = params.get("head")
+            return jnp.einsum("bsd,cdv->bscv", xf, head)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["head"])
+        return xf @ head
+
+    # -- layer stack -----------------------------------------------------------------
+
+    def _run_blocks(self, params, x, caches, positions, pos0):
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+        n_cyc, rem = cfg.pattern_cycles, cfg.pattern_remainder
+        has_cache = caches is not None
+        aux_total = jnp.float32(0.0)
+
+        def cycle(carry, inp):
+            x, aux = carry
+            if has_cache:
+                cyc_params, cyc_cache = inp
+            else:
+                cyc_params, cyc_cache = inp, [None] * len(pattern)
+            new_caches = []
+            for i, kind in enumerate(pattern):
+                x, c_new, aux_i = apply_block(
+                    kind, x, cyc_params[i], cfg, cyc_cache[i], positions,
+                    pos0)
+                new_caches.append(c_new)
+                aux = aux + aux_i
+            ys = tuple(new_caches) if has_cache else None
+            return (x, aux), ys
+
+        body = jax.remat(cycle) if cfg.remat else cycle
+
+        if n_cyc:
+            xs = ((params["blocks"], caches["blocks"]) if has_cache
+                  else params["blocks"])
+            if cfg.scan_layers:
+                (x, aux_total), new_blocks = jax.lax.scan(
+                    body, (x, aux_total), xs)
+            else:
+                outs = []
+                carry = (x, aux_total)
+                for ci in range(n_cyc):
+                    inp = jax.tree.map(lambda a: a[ci], xs)
+                    carry, ys = body(carry, inp)
+                    outs.append(ys)
+                x, aux_total = carry
+                new_blocks = (jax.tree.map(lambda *a: jnp.stack(a), *outs)
+                              if has_cache else None)
+        else:
+            new_blocks = caches["blocks"] if has_cache else None
+
+        new_rem = []
+        for i in range(rem):
+            kind = pattern[i]
+            c_i = caches["rem"][i] if has_cache else None
+            x, c_new, aux_i = apply_block(kind, x, params["rem"][i], cfg,
+                                          c_i, positions, pos0)
+            new_rem.append(c_new)
+            aux_total = aux_total + aux_i
+
+        new_caches = None
+        if has_cache:
+            new_caches = {"pos": pos0 + x.shape[1],
+                          "blocks": new_blocks, "rem": tuple(new_rem)}
+        return x, new_caches, aux_total
+
+    # -- public entry points ------------------------------------------------------------
+
+    def forward_train(self, params, tokens, patch_embeds=None):
+        """Full forward, no cache. Returns (logits, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, patch_embeds)
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _, aux = self._run_blocks(params, x, None, positions, None)
+        return self._head(params, x), aux
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        """Chunked cross-entropy: the [B, S, V] logits tensor is never
+        materialized — the head matmul + CE run per sequence chunk under
+        remat (the classic big-vocab memory fix).
+
+        batch: {tokens [B,S(,n_cb)] int32, (patch_embeds [B,P,D])}."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens, batch.get("patch_embeds"))
+        b, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, _, aux = self._run_blocks(params, x, None, positions, None)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.patch_prefix:
+            x = x[:, cfg.patch_prefix:]
+        x = x[:, :-1]
+        labels = tokens[:, 1:]
+
+        if cfg.n_codebooks:
+            head = params["head"]
+
+            def head_fn(xc):
+                return jnp.einsum("bsd,cdv->bscv", xc, head)
+        else:
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["head"])
+
+            def head_fn(xc):
+                return xc @ head
+
+        chunk = max(1, min(256, x.shape[1]))
+        n_chunk = -(-x.shape[1] // chunk)
+        pad = n_chunk * chunk - x.shape[1]
+        weights = jnp.ones(x.shape[:2], jnp.float32)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, [(0, 0), (0, pad)] +
+                             [(0, 0)] * (labels.ndim - 2))
+            weights = jnp.pad(weights, ((0, 0), (0, pad)))
+
+        def to_chunks(t):
+            return t.reshape(b, n_chunk, chunk,
+                             *t.shape[2:]).swapaxes(0, 1)
+
+        xs = (to_chunks(x), to_chunks(labels), to_chunks(weights))
+
+        @jax.remat
+        def body(carry, inp):
+            xc, lc, wc = inp
+            logits = head_fn(xc).astype(jnp.float32)
+            # seq-shard the chunk over tp: per-device logits stay small even
+            # for non-16-divisible vocabs (minicpm, phi4)
+            if cfg.n_codebooks:
+                logits = constrain(logits, "dp", "tp", None, None)
+            else:
+                logits = constrain(logits, "dp", "tp", None)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+            nll = logz - gold
+            if cfg.n_codebooks:
+                nll = jnp.mean(nll, axis=-1)
+            return carry + jnp.sum(nll * wc), None
+
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+        denom = jnp.maximum(jnp.sum(weights), 1.0)
+        return total / denom + 0.01 * aux
+
+    def prefill(self, params, tokens, cache, patch_embeds=None):
+        """Writes the cache; returns (last-token logits, cache)."""
+        x = self._embed(params, tokens, patch_embeds)
+        b, s = x.shape[0], x.shape[1]
+        pos0 = cache["pos"]
+        positions = pos0 + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (b, s))
+        x, cache, _ = self._run_blocks(params, x, cache, positions, pos0)
+        return self._head(params, x[:, -1:]), cache
+
+    def decode_step(self, params, tokens, cache):
+        """tokens [B,1(,n_cb)]; returns (logits [B,1,V(,cb)], cache)."""
+        x = self._embed(params, tokens)
+        b = x.shape[0]
+        pos0 = cache["pos"]
+        positions = jnp.full((b, 1), pos0, jnp.int32)
+        x, cache, _ = self._run_blocks(params, x, cache, positions, pos0)
+        return self._head(params, x), cache

@@ -1,0 +1,118 @@
+"""Griffin/RecurrentGemma RG-LRU recurrent block (+ causal depthwise conv).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+with a_t = exp(c * r_t * log sigmoid(Lambda)), r/i gates linear in the branch
+input.  Train/prefill uses an associative scan (log-parallel on TPU);
+decode is a single step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, dense_init
+from repro.dist.act import constrain
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d, r = cfg.d_model, cfg.d_rnn_eff
+    ks = jax.random.split(key, 11)
+    mlp = {}
+    if cfg.d_ff:
+        mlp = {
+            "ln2": jnp.ones((d,), jnp.float32),
+            "w1": dense_init(ks[7], d, cfg.d_ff, dtype),
+            "w3": dense_init(ks[8], d, cfg.d_ff, dtype),
+            "w2": dense_init(ks[9], cfg.d_ff, d, dtype),
+        }
+    return {
+        **mlp,
+        "ln": jnp.ones((d,), jnp.float32),
+        "w_gate": dense_init(ks[0], d, r, dtype),
+        "w_in": dense_init(ks[1], d, r, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, r), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "w_r": dense_init(ks[3], r, r, dtype),
+        "b_r": jnp.zeros((r,), jnp.float32),
+        "w_i": dense_init(ks[4], r, r, dtype),
+        "b_i": jnp.zeros((r,), jnp.float32),
+        # Lambda init so sigmoid(Lambda) ~ U(0.9, 0.999) (Griffin appendix)
+        "lam": jnp.asarray(
+            jax.random.uniform(ks[5], (r,), jnp.float32, 2.0, 7.0)),
+        "w_out": dense_init(ks[6], r, d, dtype),
+    }
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    r = cfg.d_rnn_eff
+    return {
+        "h": jnp.zeros((batch, r), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, r), dtype),
+    }
+
+
+def causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                state: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  u [B, S, R]; w [cw, R]; state [B, cw-1, R]."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    full = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    y = jax.lax.conv_general_dilated(
+        full, w[:, None, :].astype(u.dtype),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[2])
+    new_state = full[:, -(cw - 1):, :]
+    return y, new_state
+
+
+def lru_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t h_{t-1} + b_t over axis 1, initial h0. a/b [B,S,R], h0 [B,R]."""
+
+    def comb(x, y):
+        return (y[0] * x[0], y[0] * x[1] + y[1])
+
+    a_cum, b_cum = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return a_cum * h0[:, None, :] + b_cum
+
+
+def rglru_block(x: jnp.ndarray, p: dict, cfg,
+                cache: Optional[dict]) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x [B, S, D] -> (x + block(x), new_cache)."""
+    h = rmsnorm(x, p["ln"], cfg.norm_eps)
+    gate = constrain(jax.nn.silu(h @ p["w_gate"]), "dp", None, "tp")
+    u = constrain(h @ p["w_in"], "dp", None, "tp")           # [B,S,R]
+    conv_state = cache["conv"] if cache is not None else None
+    u, conv_state = causal_conv(u, p["conv_w"], conv_state)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32) + p["b_r"])
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])            # [B,S,R] (<0)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = beta * (i * uf)
+
+    h0 = (cache["h"] if cache is not None
+          else jnp.zeros((x.shape[0], u.shape[-1]), jnp.float32))
+    hs = lru_scan(a, b, h0)                                  # [B,S,R] f32
+
+    y = (gate * hs.astype(x.dtype)) @ p["w_out"]
+    x = x + y
+    if "w1" in p:  # Griffin: MLP block after every temporal-mixing block
+        h2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        a = h2 @ p["w1"]
+        a = jax.nn.gelu(a) if cfg.act == "gelu" else jax.nn.silu(a)
+        a = constrain(a, "dp", None, "tp")
+        x = x + (a * (h2 @ p["w3"])) @ p["w2"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": hs[:, -1, :], "conv": conv_state}
+    return constrain(x, "dp", "sp", None), new_cache

@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrent gate mixing), both with exponential gating + log-space stabilizer.
+
+Train/prefill run a chunked nested scan (outer chunks under jax.remat so the
+backward pass recomputes inner steps instead of storing 4k residual sets);
+decode is a single recurrent step on the carried state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rmsnorm, dense_init
+from repro.models.recurrent import causal_conv
+
+_CHUNK = 128  # inner scan chunk length
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg):
+    di = int(cfg.proj_factor * cfg.d_model)
+    h = cfg.n_heads
+    return di, h, di // h
+
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    di, h, dh = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w_up": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, di), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_i": dense_init(ks[5], di, h, jnp.float32),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": dense_init(ks[6], di, h, jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),   # forget-bias init
+        "w_down": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def init_mlstm_cache(cfg, batch: int, dtype) -> dict:
+    di, h, dh = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), dtype),
+    }
+
+
+def _mlstm_step(carry, inp):
+    """One recurrent step.  carry: (C [B,H,dv,dk], n [B,H,dk], m [B,H])."""
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inp     # [B,H,dh] x3, [B,H] x2
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    C = f_g[..., None, None] * C + i_g[..., None, None] * \
+        jnp.einsum("bhv,bhk->bhvk", v, k)
+    n = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h_t = jnp.einsum("bhvk,bhk->bhv", C, q) / denom[..., None]
+    return (C, n, m_new), h_t
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, state):
+    """q/k/v [B,S,H,dh] (f32), gates [B,S,H] -> (h [B,S,H,dh], state)."""
+    b, s, h, dh = q.shape
+    cl = min(_CHUNK, s)
+    n_chunk = -(-s // cl)
+    pad = n_chunk * cl - s
+
+    def to_chunks(x):
+        if pad:
+            x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        return x.reshape(b, n_chunk, cl, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks_, vs, is_, fs = map(to_chunks, (q, k, v, i_pre, f_pre))
+
+    @jax.remat
+    def chunk(carry, inp):
+        qc, kc, vc, ic, fc = inp    # [B,cl,H,dh] etc.
+        def step(c, z):
+            return _mlstm_step(c, z)
+        carry, hs = jax.lax.scan(
+            step, carry,
+            (qc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             ic.swapaxes(0, 1), fc.swapaxes(0, 1)))
+        return carry, hs.swapaxes(0, 1)   # [B,cl,H,dh]
+
+    state, hs = jax.lax.scan(chunk, state, (qs, ks_, vs, is_, fs))
+    hs = hs.swapaxes(0, 1).reshape(b, n_chunk * cl, h, dh)
+    return hs[:, :s], state
+
+
+def mlstm_block(x: jnp.ndarray, p: dict, cfg,
+                cache: Optional[dict]) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)                 # [B,S,di] each
+    conv_state = cache["conv"] if cache is not None else None
+    uc, conv_state = causal_conv(u, p["conv_w"], conv_state)
+    uc_act = jax.nn.silu(uc)
+
+    q = (uc_act @ p["wq"]).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (uc_act @ p["wk"]).reshape(b, s, h, dh).astype(jnp.float32) \
+        / math.sqrt(dh)
+    v = (u @ p["wv"]).reshape(b, s, h, dh).astype(jnp.float32)
+    i_pre = uc_act.astype(jnp.float32) @ p["w_i"] + p["b_i"]   # [B,S,H]
+    f_pre = uc_act.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+    else:
+        state = (jnp.zeros((b, h, dh, dh), jnp.float32),
+                 jnp.zeros((b, h, dh), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+
+    if s == 1:  # decode fast path
+        state, h_t = _mlstm_step(
+            state, (q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]))
+        hs = h_t[:, None]
+    else:
+        hs, state = _mlstm_scan(q, k, v, i_pre, f_pre, state)
+
+    hs = hs.reshape(b, s, di).astype(x.dtype)
+    y = (hs * jax.nn.silu(z)) @ p["w_down"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": state[0], "n": state[1], "m": state[2],
+                     "conv": conv_state}
+    return x + y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 12)
+    def rec(k):  # block-diagonal per-head recurrent matrix [H, dh, dh]
+        return (jax.random.normal(k, (h, dh, dh), jnp.float32)
+                / math.sqrt(dh)).astype(jnp.float32)
+    f_up = int(4 * d / 3)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "wz": dense_init(ks[0], d, d, dtype),
+        "wi": dense_init(ks[1], d, d, dtype),
+        "wf": dense_init(ks[2], d, d, dtype),
+        "wo": dense_init(ks[3], d, d, dtype),
+        "rz": rec(ks[4]), "ri": rec(ks[5]), "rf": rec(ks[6]), "ro": rec(ks[7]),
+        "bz": jnp.zeros((d,), jnp.float32),
+        "bi": jnp.zeros((d,), jnp.float32),
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+        "bo": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "w1": dense_init(ks[8], d, f_up, dtype),
+        "w3": dense_init(ks[9], d, f_up, dtype),
+        "w2": dense_init(ks[10], f_up, d, dtype),
+    }
+
+
+def init_slstm_cache(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def _slstm_step(carry, inp, p, heads):
+    c, n, hid, m = carry             # [B,H,dh] x3, [B,H]
+    zx, ix, fx, ox = inp             # [B,D] pre-activations from input
+    b, h, dh = c.shape
+
+    def mix(r, x_pre):               # recurrent block-diag mix + reshape
+        rec = jnp.einsum("bhd,hde->bhe", hid, r)
+        return x_pre.reshape(b, h, dh) + rec
+
+    z = jnp.tanh(mix(p["rz"], zx))
+    i_pre = mix(p["ri"], ix)
+    f_pre = mix(p["rf"], fx)
+    o = jax.nn.sigmoid(mix(p["ro"], ox))
+
+    # per-head scalar stabilizer (max over the head's units)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_cand = jnp.maximum(jnp.max(logf, -1) + m, jnp.max(i_pre, -1))
+    i_g = jnp.exp(i_pre - m_cand[..., None])
+    f_g = jnp.exp(logf + (m - m_cand)[..., None])
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    hid = o * (c / jnp.maximum(jnp.abs(n), 1e-6))
+    return (c, n, hid, m_cand), hid
+
+
+def slstm_block(x: jnp.ndarray, p: dict, cfg,
+                cache: Optional[dict]) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    xf = xn.astype(jnp.float32)
+    zx = xf @ p["wz"].astype(jnp.float32) + p["bz"]
+    ix = xf @ p["wi"].astype(jnp.float32) + p["bi"]
+    fx = xf @ p["wf"].astype(jnp.float32) + p["bf"]
+    ox = xf @ p["wo"].astype(jnp.float32) + p["bo"]
+
+    if cache is not None:
+        state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    else:
+        z0 = jnp.zeros((b, h, dh), jnp.float32)
+        state = (z0, z0, z0, jnp.zeros((b, h), jnp.float32))
+
+    if s == 1:
+        state, hid = _slstm_step(
+            state, (zx[:, 0], ix[:, 0], fx[:, 0], ox[:, 0]), p, h)
+        hs = hid[:, None]
+    else:
+        cl = min(_CHUNK, s)
+        n_chunk = -(-s // cl)
+        pad = n_chunk * cl - s
+
+        def to_chunks(t):
+            if pad:
+                t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+            return t.reshape(b, n_chunk, cl, -1).swapaxes(0, 1)
+
+        zs, is_, fs, os_ = map(to_chunks, (zx, ix, fx, ox))
+
+        @jax.remat
+        def chunk(carry, inp):
+            zc, ic, fc, oc = inp
+            carry, hs = jax.lax.scan(
+                lambda cr, z: _slstm_step(cr, z, p, h), carry,
+                (zc.swapaxes(0, 1), ic.swapaxes(0, 1),
+                 fc.swapaxes(0, 1), oc.swapaxes(0, 1)))
+            return carry, hs.swapaxes(0, 1)
+
+        state, hs = jax.lax.scan(chunk, state, (zs, is_, fs, os_))
+        hs = hs.swapaxes(0, 1).reshape(b, n_chunk * cl, h, dh)[:, :s]
+
+    y = hs.reshape(b, s, d).astype(x.dtype)
+    x = x + y
+    # block-internal gated FFN (xLSTM sLSTM post-projection, pf = 4/3)
+    xn2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    ff = (jax.nn.silu(xn2 @ p["w1"]) * (xn2 @ p["w3"])) @ p["w2"]
+    x = x + ff
+    new_cache = None
+    if cache is not None:
+        new_cache = {"c": state[0], "n": state[1], "h": state[2],
+                     "m": state[3]}
+    return x, new_cache

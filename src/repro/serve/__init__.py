@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.concurrent import ConcurrentServeScheduler, RequestStream
+
+__all__ = ["ServeEngine", "ConcurrentServeScheduler", "RequestStream"]

@@ -1,0 +1,101 @@
+"""Concurrent request scheduling for LM serving — the paper's two-level
+scheduling applied one level up (DESIGN.md §4).
+
+Mapping:
+  graph job        <-> request stream (a tenant's stream of decode requests)
+  graph block      <-> request group (requests sharing a prefix/bucket)
+  block priority   <-> <n_waiting, mean_urgency> pair (Eq. 1, verbatim)
+  CAJS             <-> one weights pass serves every admitted stream
+                       (continuous batching: weights are the shared data)
+  MPDS/global queue<-> admission: per-stream DO queues -> De_Gl_Priority
+
+The scheduler reuses repro.core's CBP comparator, Function-2 selection and
+global-queue synthesis unchanged — the point of the paper's "interlayer"
+design is exactly that the policy is data-structure-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.do_select import do_select
+from repro.core.global_q import global_queue
+
+
+@dataclasses.dataclass
+class Request:
+    stream_id: int
+    group: int              # bucket (e.g. shared-prefix / SLA class)
+    urgency: float          # higher = more urgent (deadline-derived)
+    tokens_left: int
+
+
+class RequestStream:
+    """One tenant's queue of requests ('job')."""
+
+    def __init__(self, stream_id: int):
+        self.stream_id = stream_id
+        self.waiting: List[Request] = []
+
+    def add(self, req: Request):
+        self.waiting.append(req)
+
+
+class ConcurrentServeScheduler:
+    """Admission control for each decode step over shared weights."""
+
+    def __init__(self, n_groups: int, batch_budget: int, *,
+                 alpha: float = 0.8, seed: int = 0):
+        self.n_groups = n_groups
+        self.batch_budget = batch_budget
+        self.alpha = alpha
+        self.rng = np.random.default_rng(seed)
+        self.streams: Dict[int, RequestStream] = {}
+
+    def add_stream(self, stream: RequestStream):
+        self.streams[stream.stream_id] = stream
+
+    def _pairs(self, stream: RequestStream):
+        """<Node_un, P_mean> per group for one stream (paper Eq. 1)."""
+        n_un = np.zeros(self.n_groups)
+        p_sum = np.zeros(self.n_groups)
+        for r in stream.waiting:
+            n_un[r.group] += 1
+            p_sum[r.group] += r.urgency
+        p_mean = np.where(n_un > 0, p_sum / np.maximum(n_un, 1), 0.0)
+        return n_un, p_mean
+
+    def schedule_step(self) -> List[Request]:
+        """Pick request groups via the two-level policy, then admit requests
+        from selected groups (all streams share them — CAJS) up to budget."""
+        q = max(1, self.batch_budget // 4)
+        queues = []
+        for stream in self.streams.values():
+            n_un, p_mean = self._pairs(stream)
+            queues.append(do_select(n_un, p_mean, q, self.rng))
+        gq = global_queue(queues, self.n_groups, q, self.alpha)
+
+        admitted: List[Request] = []
+        selected = set(int(g) for g in gq)
+        # round-robin across streams within selected groups (fair sharing)
+        for g in gq:
+            for stream in self.streams.values():
+                if len(admitted) >= self.batch_budget:
+                    return admitted
+                for r in list(stream.waiting):
+                    if r.group == int(g):
+                        admitted.append(r)
+                        stream.waiting.remove(r)
+                        break
+        # fill remaining budget from any group (paper: finished jobs keep
+        # computing low-priority blocks instead of idling)
+        for stream in self.streams.values():
+            for r in list(stream.waiting):
+                if len(admitted) >= self.batch_budget:
+                    return admitted
+                admitted.append(r)
+                stream.waiting.remove(r)
+        return admitted

@@ -1,0 +1,54 @@
+"""Serving engine: jit'd prefill + decode with donated KV caches."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import LM
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, *, max_len: int = 1024):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(model.prefill, donate_argnums=(2,))
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def new_cache(self, batch: int):
+        return self.model.init_cache(batch=batch, max_len=self.max_len)
+
+    def prefill(self, tokens, cache, patch_embeds=None):
+        if patch_embeds is not None:
+            return jax.jit(self.model.prefill, donate_argnums=(2,),
+                           static_argnums=())(self.params, tokens, cache,
+                                              patch_embeds)
+        return self._prefill(self.params, tokens, cache)
+
+    def decode(self, tokens, cache):
+        return self._decode(self.params, tokens, cache)
+
+    def generate(self, prompt_tokens: jnp.ndarray, n_steps: int,
+                 *, greedy: bool = True, rng: Optional[Any] = None):
+        """prompt [B, S] -> generated [B, n_steps] (greedy or sampled)."""
+        b = prompt_tokens.shape[0]
+        cache = self.new_cache(b)
+        logits, cache = self.prefill(prompt_tokens, cache)
+        out = []
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for i in range(n_steps):
+            out.append(tok)
+            logits, cache = self.decode(tok, cache)
+            if greedy:
+                tok = jnp.argmax(logits[:, -1:] if logits.ndim == 3
+                                 else logits[:, -1:], axis=-1).astype(jnp.int32)
+                tok = tok.reshape(b, 1)
+            else:
+                rng, k = jax.random.split(rng)
+                tok = jax.random.categorical(
+                    k, logits[:, -1]).reshape(b, 1).astype(jnp.int32)
+        return jnp.concatenate(out, axis=1)

@@ -1,0 +1,151 @@
+"""Checkpointing with elastic re-shard on restore.
+
+Format: <dir>/step_<N>/
+  manifest.json   - tree structure, shapes, dtypes, step, mesh metadata
+  data.msgpack    - flat list of raw little-endian buffers
+
+Restore takes a *target* mesh/shardings that may differ from the mesh the
+checkpoint was written under (elastic scaling): arrays are rebuilt as global
+values and device_put with the new sharding.  Writes are atomic
+(tmp dir + rename) and an optional background thread makes them async
+(compute/IO overlap).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _tree_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(str(k) for k in path) for path, _ in flat]
+
+
+def save_checkpoint(directory: str, step: int, tree: Any,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(jax.device_get(x)) for x in leaves]
+    manifest = {
+        "step": int(step),
+        "treedef": str(treedef),
+        "paths": _tree_paths(tree),
+        "shapes": [list(a.shape) for a in host],
+        "dtypes": [a.dtype.name if a.dtype.name != "bfloat16" else "bfloat16"
+                   for a in host],
+        "extra": extra or {},
+    }
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "data.msgpack"), "wb") as f:
+        packer = msgpack.Packer()
+        f.write(packer.pack(len(host)))
+        for a in host:
+            f.write(packer.pack(a.tobytes()))
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # prune older checkpoints, keep last 3
+    steps = sorted(d for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for old in steps[:-3]:
+        shutil.rmtree(os.path.join(directory, old))
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint IO with compute: save on a background thread,
+    never more than one outstanding write."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        # materialize on host synchronously (cheap vs device step), write async
+        leaves, treedef = _flatten(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        tree_host = jax.tree_util.tree_unflatten(treedef, host)
+
+        def work():
+            save_checkpoint(self.directory, step, tree_host, extra)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, tree_like: Any,
+                       shardings: Any = None,
+                       step: Optional[int] = None) -> tuple:
+    """Restore onto a possibly DIFFERENT mesh (elastic re-shard).
+
+    tree_like: pytree with the same structure (e.g. from eval_shape or a
+    freshly-initialized state).  shardings: optional matching tree of
+    NamedSharding for the *target* mesh; None leaves arrays on default
+    placement.  Returns (tree, step).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(path, "data.msgpack"), "rb") as f:
+        unpacker = msgpack.Unpacker(f, max_buffer_size=2**31)
+        n = unpacker.unpack()
+        raw = [unpacker.unpack() for _ in range(n)]
+
+    leaves, treedef = _flatten(tree_like)
+    assert len(leaves) == n, f"leaf count mismatch {len(leaves)} != {n}"
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * n)
+
+    out = []
+    for buf, shape, dtype_name, like, sh in zip(
+            raw, manifest["shapes"], manifest["dtypes"], leaves,
+            shard_leaves):
+        dtype = jnp.bfloat16 if dtype_name == "bfloat16" else np.dtype(
+            dtype_name)
+        arr = np.frombuffer(buf, dtype=np.uint8).view(
+            np.dtype("uint16") if dtype_name == "bfloat16" else dtype
+        )
+        if dtype_name == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        arr = arr.reshape(shape)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]

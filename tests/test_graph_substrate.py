@@ -1,0 +1,80 @@
+"""Graph structure + generator tests (networkx as oracle where applicable)."""
+
+import numpy as np
+import pytest
+
+from repro.graph import (CSRGraph, build_blocked, rmat_graph, uniform_graph,
+                         chain_graph, grid_graph)
+
+
+def _roundtrip_edges(csr):
+    src = np.repeat(np.arange(csr.n), csr.out_degree)
+    return set(zip(src.tolist(), csr.indices.tolist()))
+
+
+def test_csr_from_edges_dedupes_min_weight():
+    src = np.array([0, 0, 1, 0], dtype=np.int64)
+    dst = np.array([1, 1, 2, 2], dtype=np.int64)
+    w = np.array([5.0, 2.0, 1.0, 3.0], dtype=np.float32)
+    g = CSRGraph.from_edges(3, src, dst, w)
+    assert g.nnz == 3
+    # edge (0,1) keeps min weight 2.0
+    e01 = g.weights[np.searchsorted(g.indices[g.indptr[0]:g.indptr[1]], 1)]
+    assert e01 == 2.0
+
+
+def test_generators_no_dangling():
+    for g in (rmat_graph(500, 4, seed=1), uniform_graph(300, 3, seed=2),
+              chain_graph(64), grid_graph(12)):
+        assert (g.out_degree >= 1).all()
+        assert g.indices.max() < g.n
+        assert g.indices.min() >= 0
+
+
+def test_symmetrize():
+    g = chain_graph(10)
+    s = g.symmetrized()
+    edges = _roundtrip_edges(s)
+    for (u, v) in _roundtrip_edges(g):
+        assert (v, u) in edges
+
+
+@pytest.mark.parametrize("n,vb", [(100, 16), (257, 32), (64, 64)])
+def test_blocked_reconstruction(n, vb):
+    """Dense tiles must reproduce the adjacency matrix exactly."""
+    csr = uniform_graph(n, 4, seed=3, weighted=True)
+    g = build_blocked(csr, vb, fill=0.0)
+    dense = np.zeros((g.n_padded, g.n_padded), dtype=np.float32)
+    nbr = np.asarray(g.nbr_ids)
+    msk = np.asarray(g.nbr_mask)
+    tiles = np.asarray(g.tiles)
+    for b in range(g.num_blocks):
+        for k in range(g.max_nbr_blocks):
+            if msk[b, k]:
+                d = nbr[b, k]
+                dense[b * vb:(b + 1) * vb, d * vb:(d + 1) * vb] += tiles[b, k]
+    ref = np.zeros_like(dense)
+    src = np.repeat(np.arange(csr.n), csr.out_degree)
+    ref[src, csr.indices] = csr.weights
+    np.testing.assert_allclose(dense, ref)
+
+
+def test_blocked_out_degree_normalize_rows_sum_to_one():
+    csr = rmat_graph(200, 6, seed=5)
+    g = build_blocked(csr, 32, fill=0.0, normalize="out_degree")
+    nbr_sum = np.zeros(g.n_padded, dtype=np.float64)
+    tiles = np.asarray(g.tiles, dtype=np.float64)
+    msk = np.asarray(g.nbr_mask)
+    for b in range(g.num_blocks):
+        for k in range(g.max_nbr_blocks):
+            if msk[b, k]:
+                nbr_sum[b * 32:(b + 1) * 32] += tiles[b, k].sum(axis=1)
+    np.testing.assert_allclose(nbr_sum[:csr.n], 1.0, rtol=1e-5)
+
+
+def test_blocked_min_plus_fill():
+    csr = chain_graph(20, weighted=True, w_max=4.0)
+    g = build_blocked(csr, 8, fill=float("inf"))
+    tiles = np.asarray(g.tiles)
+    assert np.isinf(tiles).sum() > 0
+    assert (tiles[np.isfinite(tiles)] >= 1.0).all()

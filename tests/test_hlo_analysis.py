@@ -1,0 +1,104 @@
+"""HLO analysis unit tests: loop trip parsing, collective wire accounting,
+dot-FLOP counting (validated against a known matmul-in-scan program)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(fn, *specs, shardings=None):
+    jitted = jax.jit(fn) if shardings is None else jax.jit(
+        fn, in_shardings=shardings)
+    return jitted.lower(*specs).compile()
+
+
+def test_dot_flops_counts_scan_trip():
+    L, D = 8, 64
+
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, ws)
+        return c
+
+    comp = _compile(f, jax.ShapeDtypeStruct((32, D), jnp.float32),
+                    jax.ShapeDtypeStruct((L, D, D), jnp.float32))
+    flops = H.parse_dot_flops(comp.as_text())
+    expect = 2 * 32 * D * D * L
+    assert expect * 0.9 <= flops <= expect * 1.2, (flops, expect)
+
+
+def test_dot_flops_no_loop():
+    def f(a, b):
+        return a @ b
+
+    comp = _compile(f, jax.ShapeDtypeStruct((16, 32), jnp.float32),
+                    jax.ShapeDtypeStruct((32, 8), jnp.float32))
+    flops = H.parse_dot_flops(comp.as_text())
+    assert flops == pytest.approx(2 * 16 * 32 * 8, rel=0.01)
+
+
+def test_loop_trip_count_parser():
+    cond = """
+  %constant.5 = s32[] constant(40)
+  %compare.1 = pred[] compare(%get-tuple-element.3, %constant.5), direction=LT
+"""
+    assert H._loop_trip_count(cond) == 40
+
+
+def test_collective_wire_formulas():
+    c = H.Collective(op="all-reduce", tensor_bytes=1000, group_size=4,
+                     multiplier=1, computation="x")
+    assert c.wire_bytes_per_device == pytest.approx(2 * 1000 * 3 / 4)
+    c = H.Collective(op="all-gather", tensor_bytes=1000, group_size=4,
+                     multiplier=1, computation="x")
+    assert c.wire_bytes_per_device == pytest.approx(1000 * 3 / 4)
+    c = H.Collective(op="reduce-scatter", tensor_bytes=250, group_size=4,
+                     multiplier=1, computation="x")
+    assert c.wire_bytes_per_device == pytest.approx(250 * 3)
+
+
+def test_tensor_bytes_tuple_types():
+    assert H._tensor_bytes("(f32[2,3], bf16[4])") == 2 * 3 * 4 + 4 * 2
+    assert H._tensor_bytes("f32[128,256]") == 128 * 256 * 4
+
+
+def test_analytic_matches_hlo_dot_flops_on_smoke_arch():
+    """Cross-check: analytic block FLOPs vs parsed dots for a smoke train
+    step (within 35% — analytic excludes elementwise, HLO includes bwd
+    rearrangement dots)."""
+    import dataclasses
+    from repro import configs
+    from repro.models import LM
+    from repro.launch.analytic import cell_flops
+    from repro.models.config import ShapeConfig
+
+    cfg = dataclasses.replace(configs.get_smoke("qwen3-32b"),
+                              scan_layers=True)
+    model = LM(cfg)
+    shape = ShapeConfig("t", "train", 32, 4)
+
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+
+    def loss_fn(p, b):
+        return model.loss(p, b)
+
+    def step(p, b):
+        return jax.grad(loss_fn)(p, b)
+
+    comp = jax.jit(step).lower(params, batch).compile()
+    hlo_flops = H.parse_dot_flops(comp.as_text())
+    ana = cell_flops(cfg, shape)
+    # compare forward+backward matmul flops (exclude optimizer constant)
+    expect = ana["fwd_flops"] * 3
+    assert 0.5 * expect < hlo_flops < 2.0 * expect, (hlo_flops, expect)
+
+
+def test_roofline_terms_dominance():
+    t = H.roofline_terms(197e12, 100e9, 1e9)   # 1s compute, .12s mem, .02s coll
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)

@@ -1,0 +1,161 @@
+"""Unit + property tests for the paper's scheduling primitives."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (block_pairs, cbp, do_score, do_select, global_queue,
+                        optimal_queue_length)
+
+
+# --- Function 1 (CBP), paper Table 1 cases ---------------------------------
+
+def test_cbp_case1_higher_mean_and_count_wins():
+    assert cbp((10, 5.0), (5, 2.0))          # case 1: both larger -> a
+
+
+def test_cbp_case3_equal_mean_more_nodes_wins():
+    assert cbp((10, 2.0), (5, 2.0))          # case 3
+
+
+def test_cbp_case4_equal_count_higher_mean_wins():
+    assert cbp((5, 5.0), (5, 2.0))           # case 4
+
+
+def test_cbp_case2_within_band_total_decides():
+    # means within 20% band, b's total higher -> b wins
+    a, b = (2, 10.0), (10, 9.0)              # |10-9| < 0.2*10; 20 < 90
+    assert not cbp(a, b)
+    assert cbp(b, a)
+
+
+def test_cbp_case2_outside_band_mean_decides():
+    a, b = (2, 10.0), (100, 7.0)             # |10-7| >= 2.0 -> mean decides
+    assert cbp(a, b)
+
+
+def test_cbp_antisymmetric_on_strict_orders():
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        pa = (float(rng.integers(1, 50)), float(rng.uniform(0.1, 10)))
+        pb = (float(rng.integers(1, 50)), float(rng.uniform(0.1, 10)))
+        if pa == pb:
+            continue
+        # at most one strict winner (ties both-True are allowed only for
+        # equal pairs, handled above)
+        if cbp(pa, pb) and cbp(pb, pa):
+            # both claim >=: acceptable only if neither mean nor total differ
+            assert np.isclose(pa[1], pb[1]) and np.isclose(
+                pa[0] * pa[1], pb[0] * pb[1])
+
+
+# --- pairs (Eq. 1) -----------------------------------------------------------
+
+def test_block_pairs_eq1():
+    p = jnp.asarray([[[0.0, 2.0, 4.0, 0.0],
+                      [0.0, 0.0, 0.0, 0.0]]])
+    n, m = block_pairs(p)
+    assert n[0, 0] == 2 and m[0, 0] == 3.0
+    assert n[0, 1] == 0 and m[0, 1] == 0.0
+
+
+# --- Function 2 (DO selection) ----------------------------------------------
+
+@given(bn=st.integers(4, 300), qfrac=st.floats(0.05, 0.9),
+       seed=st.integers(0, 10000))
+@settings(max_examples=30, deadline=None)
+def test_do_select_returns_live_sorted_queue(bn, qfrac, seed):
+    rng = np.random.default_rng(seed)
+    node_un = rng.integers(0, 20, bn).astype(np.float64)
+    p_mean = np.where(node_un > 0, rng.uniform(0.1, 5.0, bn), 0.0)
+    q = max(1, int(qfrac * bn))
+    out = do_select(node_un, p_mean, q, np.random.default_rng(seed + 1), s=50)
+    # no converged blocks, no duplicates, bounded length
+    assert len(out) <= q
+    assert len(set(out.tolist())) == len(out)
+    assert (node_un[out] > 0).all()
+    # CBP-descending order
+    for i in range(len(out) - 1):
+        a = (node_un[out[i]], p_mean[out[i]])
+        b = (node_un[out[i + 1]], p_mean[out[i + 1]])
+        assert cbp(a, b) or (a == b)
+
+
+def test_do_select_picks_the_hot_block():
+    bn = 100
+    node_un = np.ones(bn)
+    p_mean = np.full(bn, 0.01)
+    node_un[42] = 50
+    p_mean[42] = 100.0
+    out = do_select(node_un, p_mean, 5, np.random.default_rng(0))
+    assert out[0] == 42
+
+
+def test_do_select_all_converged():
+    out = do_select(np.zeros(10), np.zeros(10), 3, np.random.default_rng(0))
+    assert len(out) == 0
+
+
+# --- De_Gl_Priority -----------------------------------------------------------
+
+def test_global_queue_fig7_accumulation():
+    # two jobs, q=4; block 7 ranked head by both -> top cumulative Pri 2q=8
+    jq = [np.array([7, 1, 2, 3]), np.array([7, 4, 5, 6])]
+    gq = global_queue(jq, num_blocks=10, q=4, alpha=0.8)
+    assert gq[0] == 7
+    assert len(gq) <= 4
+
+
+def test_global_queue_reserved_slots_for_individual_heads():
+    # job B's head (block 9) has low cumulative weight but must be reserved
+    jq = [np.array([1, 2, 3, 4, 5, 6, 7, 8]),
+          np.array([1, 2, 3, 4, 5, 6, 7, 8]),
+          np.array([9])]
+    gq = global_queue(jq, num_blocks=12, q=8, alpha=0.8)
+    assert 9 in gq.tolist()
+
+
+def test_global_queue_empty():
+    assert len(global_queue([np.empty(0, np.int64)], 5, 3)) == 0
+
+
+# --- q = C * B_N / sqrt(V_N) (Eq. 4) -----------------------------------------
+
+def test_optimal_queue_length_formula_and_clamp():
+    # V_N = 1e6, B_N = 1000 -> q = 100*1000/1000 = 100
+    assert optimal_queue_length(1000, 10**6) == 100
+    assert optimal_queue_length(4, 10**6) == 1      # clamp low
+    assert optimal_queue_length(10, 4) == 10        # clamp to B_N
+
+
+# --- device DO score approximates CBP order ----------------------------------
+
+def test_do_score_orders_clear_cases_like_cbp():
+    n = jnp.asarray([10.0, 5.0, 0.0])
+    m = jnp.asarray([5.0, 2.0, 0.0])
+    s = np.asarray(do_score(n, m))
+    assert s[0] > s[1]          # case 1
+    assert s[2] == -np.inf      # converged
+    # band case within one log-bucket: means within 20%, total decides
+    n2 = jnp.asarray([2.0, 10.0])
+    m2 = jnp.asarray([10.0, 9.8])
+    s2 = np.asarray(do_score(n2, m2))
+    assert s2[1] > s2[0]
+
+
+def test_do_score_statistical_agreement_with_cbp():
+    """CBP is non-transitive (band rule admits cycles), so no scalar score
+    embeds it exactly; require high agreement on random pairs instead."""
+    rng = np.random.default_rng(42)
+    n = rng.integers(1, 50, size=4000).astype(np.float64)
+    m = rng.uniform(0.1, 10.0, size=4000)
+    s = np.asarray(do_score(jnp.asarray(n), jnp.asarray(m)))
+    agree = total = 0
+    for i in range(0, 4000, 2):
+        a, b = (n[i], m[i]), (n[i + 1], m[i + 1])
+        want = cbp(a, b)
+        got = s[i] > s[i + 1]
+        total += 1
+        agree += int(want == got)
+    assert agree / total > 0.85, agree / total
