@@ -13,10 +13,16 @@
   tab_kernel               : mj_spmm Pallas kernel vs jnp reference
                              (interpret mode on CPU: correctness-grade
                              timing; real speed is a TPU property).
+  fig_scaling              : job-sharded two-level engine (repro.dist.graph)
+                             — tile loads + supersteps vs device count.
+                             Meaningful with several devices, e.g.
+                             XLA_FLAGS=--xla_force_host_platform_device_count=4
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  Modes are selectable:
+``python benchmarks/run.py [mode ...]`` (default: all).
 """
 
+import argparse
 import time
 
 import numpy as np
@@ -131,13 +137,60 @@ def tab_kernel():
     row("tab_kernel_allclose", 0.0, f"max_abs_err={err:.2e}")
 
 
-def main() -> None:
+def fig_scaling():
+    """Multi-device concurrent jobs: shard the job axis over 1..D devices.
+    Supersteps and tile loads are schedule-invariants (the sharded run is
+    bit-identical to single-device; tiles are REPLICATED, so each device
+    still stages every selected block once per superstep).  What the job
+    axis divides is the per-device PUSH work — each device runs the
+    (job, block) processing events of only its local J/d jobs against its
+    locally staged tiles (per-device CAJS)."""
+    import jax
+    from repro.dist.graph import make_job_mesh
+
+    csr = rmat_graph(1000, 8, seed=6)
+    n_jobs, n_dev = 8, len(jax.devices())
+    ref = None
+    for d in sorted({1, 2, n_dev} | {n_dev // 2 or 1}):
+        if d < 1 or n_dev % d or n_jobs % d:
+            continue
+        eng = ConcurrentEngine(make_run(_jobs(n_jobs), csr, 64), seed=0)
+        t0 = time.time()
+        m = eng.run_two_level(50000, mesh=make_job_mesh(d))
+        dt = time.time() - t0
+        assert m.converged
+        if ref is None:
+            ref = eng.results()
+        else:
+            np.testing.assert_array_equal(eng.results(), ref)
+        row(f"fig_scaling_d{d}", dt * 1e6 / max(m.supersteps, 1),
+            f"devices={d};jobs={n_jobs};supersteps={m.supersteps};"
+            f"tile_loads_per_device={m.tile_loads};"
+            f"job_pushes_per_device={m.job_block_pushes / d:.0f}")
+
+
+MODES = {
+    "fig4_5_memory_redundancy": fig4_5_memory_redundancy,
+    "fig_convergence": fig_convergence,
+    "fig_throughput": fig_throughput,
+    "tab_do_cost": tab_do_cost,
+    "tab_kernel": tab_kernel,
+    "fig_scaling": fig_scaling,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modes", nargs="*", metavar="mode",
+                    help=f"benchmark modes to run (default: all) "
+                         f"from: {', '.join(MODES)}")
+    args = ap.parse_args(argv)
+    unknown = [m for m in args.modes if m not in MODES]
+    if unknown:
+        ap.error(f"unknown mode(s) {unknown}; choose from {list(MODES)}")
     print("name,us_per_call,derived")
-    fig4_5_memory_redundancy()
-    fig_convergence()
-    fig_throughput()
-    tab_do_cost()
-    tab_kernel()
+    for name in (args.modes or MODES):
+        MODES[name]()
     print(f"\n{len(ROWS)} benchmark rows OK")
 
 

@@ -236,8 +236,24 @@ class ConcurrentEngine:
 
     # -- runs ----------------------------------------------------------------
 
-    def run_two_level(self, max_supersteps: int = 100000) -> RunMetrics:
-        """The paper's schedule: MPDS (host DO + global queue) + CAJS push."""
+    def _place(self, mesh) -> None:
+        """Shard the job axis over `mesh` (repro.dist.graph): tiles
+        replicated per device, values/deltas job-sharded.  Scheduling below
+        is unchanged — SPMD partitions the vmapped pushes along the job axis,
+        so per-job arithmetic (and the fixpoint) is identical."""
+        if mesh is None:
+            return
+        from repro.dist.graph import shard_run
+        self.run = shard_run(self.run, mesh)
+
+    def run_two_level(self, max_supersteps: int = 100000, *,
+                      mesh=None) -> RunMetrics:
+        """The paper's schedule: MPDS (host DO + global queue) + CAJS push.
+
+        mesh: optional jax.sharding.Mesh (e.g. dist.graph.make_job_mesh());
+        J jobs are sharded across its devices, each device staging selected
+        blocks once for its local jobs (per-device CAJS)."""
+        self._place(mesh)
         r, g = self.run, self.run.graph
         rng = np.random.default_rng(self.seed)
         m = RunMetrics(iterations_per_job=np.zeros(r.num_jobs, dtype=np.int64))
@@ -332,8 +348,14 @@ class ConcurrentEngine:
         self.run = dataclasses.replace(r, values=values, deltas=deltas)
         return m
 
-    def run_fused(self, max_supersteps: int = 100000) -> RunMetrics:
-        """Beyond-paper: entire two-level loop in one on-device while_loop."""
+    def run_fused(self, max_supersteps: int = 100000, *,
+                  mesh=None) -> RunMetrics:
+        """Beyond-paper: entire two-level loop in one on-device while_loop.
+
+        mesh: optional Mesh; shards the job axis as in run_two_level.  The
+        whole while_loop then runs SPMD with job state partitioned and one
+        scalar all-reduce per superstep for the convergence test."""
+        self._place(mesh)
         r, g = self.run, self.run.graph
         alg = r.algs[0]
         q, alpha = self.q, self.alpha

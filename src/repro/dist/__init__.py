@@ -1,0 +1,17 @@
+"""repro.dist: the distributed substrate.
+
+  act          - logical-axis activation sharding (constrain / axis_size /
+                 is_serve under an activation_sharding context)
+  sharding     - ShardingRules (logical -> mesh axes), state-tree shardings,
+                 elastic reshard helpers
+  fault        - RestartManager (checkpoint-resume), StragglerWatchdog
+  compression  - int8 gradient all-reduce with error feedback
+  pipeline     - GPipe-style microbatched pipeline-parallel loss
+  graph        - job-axis sharding for concurrent graph runs (multi-device
+                 CAJS: tiles replicated, job state sharded)
+
+Submodules are imported lazily by call sites (`from repro.dist.act import
+constrain`) so importing `repro.dist` itself never touches jax device state.
+"""
+
+__all__ = ["act", "sharding", "fault", "compression", "pipeline", "graph"]

@@ -1,0 +1,73 @@
+"""Activation sharding via *logical* axis names.
+
+Model code annotates intermediate tensors with logical axes ("dp", "sp",
+"tp", "fsdp") through `constrain`; a surrounding `activation_sharding(rules)`
+context resolves them to mesh axes per the active ShardingRules policy and
+emits `with_sharding_constraint`.  Outside any context every annotation is an
+identity, so the same model code runs unsharded on one device (smoke tests)
+and sharded on a pod without modification.
+
+The context is thread-local (the serve engine runs prefill/decode cells from
+worker threads) and re-entrant (nested cells keep their own rules).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+_local = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_local, "stack"):
+        _local.stack = []
+    return _local.stack
+
+
+def _current() -> Optional[Tuple[object, bool]]:
+    st = _stack()
+    return st[-1] if st else None
+
+
+@contextlib.contextmanager
+def activation_sharding(rules, serve: bool = False):
+    """Activate `rules` (a repro.dist.sharding.ShardingRules) for constrain /
+    axis_size / is_serve within the dynamic extent."""
+    _stack().append((rules, serve))
+    try:
+        yield rules
+    finally:
+        _stack().pop()
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """Constrain `x` to the sharding implied by per-dim logical axis names
+    (None = replicated dim).  Identity outside an activation_sharding
+    context or when no named axis resolves to a real mesh axis."""
+    cur = _current()
+    if cur is None:
+        return x
+    rules = cur[0]
+    sharding = rules.named(x.shape, list(logical_axes))
+    if all(p is None for p in sharding.spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)
+
+
+def axis_size(logical_axis: str) -> int:
+    """Total device count behind a logical axis under the active rules
+    (1 outside any context: the unsharded code path)."""
+    cur = _current()
+    if cur is None:
+        return 1
+    return cur[0].axis_size(logical_axis)
+
+
+def is_serve() -> bool:
+    """True when the active activation_sharding context is a serve cell."""
+    cur = _current()
+    return bool(cur is not None and cur[1])

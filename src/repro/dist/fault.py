@@ -1,0 +1,128 @@
+"""Fault tolerance: checkpoint-resume restart loop + straggler detection.
+
+RestartManager wraps a training loop with the standard preemption contract:
+periodic (async) checkpoints, and on ANY step failure the loop restores the
+latest checkpoint and replays forward.  With deterministic data (data_fn is
+keyed by step) the recovered run is bit-identical to an uninterrupted one.
+
+StragglerWatchdog keeps a sliding window of step durations and reports a
+step whose duration exceeds `threshold` x the window median — the signal the
+launch layer uses to trigger an elastic reshard away from a slow host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import sys
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+
+
+class RestartManager:
+    """Run a step loop to completion across simulated/real preemptions."""
+
+    def __init__(self, directory: str, *, save_every: int = 10,
+                 max_restarts: int = 100):
+        self.directory = directory
+        self.save_every = max(1, int(save_every))
+        self.max_restarts = max_restarts
+        self._ckpt = AsyncCheckpointer(directory)
+
+    def _restore(self, like: Any, shardings: Any) -> Tuple[Any, int]:
+        state, step = restore_checkpoint(self.directory, like, shardings)
+        return state, int(step)
+
+    def run(self, init_state: Any,
+            step_fn: Callable[[Any, Any], Tuple[Any, Any]],
+            data_fn: Callable[[int], Any],
+            total_steps: int, *,
+            failure_hook: Optional[Callable[[int], None]] = None,
+            shardings: Any = None) -> Tuple[Any, int, int]:
+        """Returns (final_state, steps_completed, restarts).
+
+        step_fn(state, batch) -> (state, metrics); data_fn(step) -> batch
+        must be deterministic in `step` for exact recovery.  failure_hook
+        (tests / chaos injection) runs before each step and may raise.
+        Checkpoints land every `save_every` completed steps; a crash between
+        checkpoints replays at most save_every - 1 steps.
+        """
+        like = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+            init_state)
+        if latest_step(self.directory) is None:
+            # durable step-0 snapshot BEFORE the first step: callers donate
+            # the state into their jitted step (train.py donate_argnums), so
+            # init_state's buffers are dead after step 1 — a failure before
+            # the first periodic checkpoint must restore from disk, never
+            # from the (deleted) initial buffers
+            save_checkpoint(self.directory, 0, init_state)
+            state, step = init_state, 0   # still alive here; no reload
+        else:
+            state, step = self._restore(like, shardings)
+        restarts = 0
+        while step < total_steps:
+            try:
+                if failure_hook is not None:
+                    failure_hook(step)
+                batch = data_fn(step)
+                state, _ = step_fn(state, batch)
+                step += 1
+                if step % self.save_every == 0 or step == total_steps:
+                    self._ckpt.save(step, state)
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                # surface every failure: a deterministic step bug replays
+                # identically and would otherwise burn max_restarts in silence
+                print(f"[restart-manager] step {step} failed ({e!r}); "
+                      f"restart {restarts}/{self.max_restarts}",
+                      file=sys.stderr)
+                self._ckpt.wait()  # never restore a half-written checkpoint
+                state, step = self._restore(like, shardings)
+        self._ckpt.wait()
+        return state, step, restarts
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    duration: float
+    median: float
+    ratio: float
+
+
+class StragglerWatchdog:
+    """Sliding-window step-duration monitor.
+
+    observe(step, duration) returns a StragglerReport when `duration`
+    exceeds threshold x the median of the last `window` durations, or None
+    (including while the window is still filling)."""
+
+    def __init__(self, window: int = 8, threshold: float = 2.0):
+        self.window = max(1, int(window))
+        self.threshold = threshold
+        self._durations: list = []
+
+    def observe(self, step: int, duration: float) -> Optional[StragglerReport]:
+        report = None
+        if len(self._durations) >= self.window:
+            med = statistics.median(self._durations[-self.window:])
+            if med > 0 and duration >= self.threshold * med:
+                report = StragglerReport(step=step, duration=duration,
+                                         median=med,
+                                         ratio=duration / med)
+        if report is None:
+            # straggler steps stay out of the baseline window
+            self._durations.append(float(duration))
+            if len(self._durations) > self.window:
+                self._durations = self._durations[-self.window:]
+        return report

@@ -1,0 +1,169 @@
+"""Sharding rules: logical axes -> mesh axes, plus state-tree shardings.
+
+Two policies over the production ("data", "model") mesh (launch/mesh.py):
+
+  "dp"  - pure FSDP-DP: the batch (and fsdp parameter shards) tile EVERY
+          chip; no tensor parallelism.
+  "tp"  - TP/EP/SP: batch over "data", tensor/expert/sequence parallelism
+          over "model".
+
+Rules degrade gracefully: logical axes whose mesh axes are absent from the
+mesh (e.g. a ("pod",)-only pipeline mesh) or whose sizes do not divide the
+tensor dim simply drop to replicated — the same model code lowers on any
+mesh, including the 1-device test mesh.
+
+`reshard` is the elastic helper: device_put a whole state tree onto new
+shardings (possibly a different mesh — elastic rescale after a restart).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis candidates, per policy
+_POLICIES: Dict[str, Dict[str, Tuple[str, ...]]] = {
+    "dp": {
+        "dp": ("pod", "data", "model"),
+        "fsdp": ("pod", "data", "model"),
+        "tp": (),
+        "sp": (),
+        "ep": (),
+    },
+    "tp": {
+        "dp": ("pod", "data"),
+        "fsdp": ("pod", "data"),
+        "tp": ("model",),
+        "sp": ("model",),
+        "ep": ("model",),
+    },
+}
+
+
+class ShardingRules:
+    """Maps logical axis names to mesh axes for one (mesh, policy) pair."""
+
+    def __init__(self, mesh: Mesh, policy: str = "dp"):
+        if policy not in _POLICIES:
+            raise ValueError(f"unknown sharding policy {policy!r}")
+        self.mesh = mesh
+        self.policy = policy
+        table = _POLICIES[policy]
+        self.table: Dict[str, Tuple[str, ...]] = {
+            k: tuple(a for a in v if a in mesh.axis_names)
+            for k, v in table.items()}
+
+    def mesh_axes(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        return self.table.get(logical, ())
+
+    def axis_size(self, logical: str) -> int:
+        n = 1
+        for a in self.mesh_axes(logical):
+            n *= self.mesh.shape[a]
+        return n
+
+    def spec(self, shape: Sequence[int],
+             logical_axes: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for `shape`, dropping any mesh axis already used on
+        an earlier dim or whose size does not divide the dim."""
+        used: set = set()
+        parts: List[Any] = []
+        for dim, lax_name in zip(shape, logical_axes):
+            chosen: List[str] = []
+            n = 1
+            for a in self.mesh_axes(lax_name):
+                if a in used:
+                    continue
+                sz = self.mesh.shape[a]
+                if dim % (n * sz) == 0:
+                    chosen.append(a)
+                    n *= sz
+            used.update(chosen)
+            if not chosen:
+                parts.append(None)
+            elif len(chosen) == 1:
+                parts.append(chosen[0])
+            else:
+                parts.append(tuple(chosen))
+        return P(*parts)
+
+    def named(self, shape: Sequence[int],
+              logical_axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, logical_axes))
+
+
+def _leaf_sharding(rules: ShardingRules, shape: Sequence[int],
+                   logical: str, prefer_last: bool) -> NamedSharding:
+    """Shard the largest divisible dim of `shape` over `logical`; ties go to
+    the last dim for serve/TP (output features resident per device) and to
+    the first for train/FSDP."""
+    if not shape or rules.axis_size(logical) <= 1:
+        return rules.named(shape, [None] * len(shape))
+    group = rules.axis_size(logical)
+    order = range(len(shape) - 1, -1, -1) if prefer_last else range(len(shape))
+    best = None
+    for i in order:
+        if shape[i] % group == 0 and (best is None or shape[i] > shape[best]):
+            best = i
+    axes: List[Optional[str]] = [None] * len(shape)
+    if best is not None:
+        axes[best] = logical
+    return rules.named(shape, axes)
+
+
+def param_shardings(rules: ShardingRules, params: Any, *,
+                    serve: bool = False) -> Any:
+    """Tree of NamedShardings for a parameter tree.
+
+    Train: FSDP — each tensor sharded on its largest fsdp-divisible dim.
+    Serve: weights stay resident, sharded over the tp axis (prefer the output
+    feature dim) so matmul shards line up with activation TP."""
+    logical = "tp" if serve else "fsdp"
+    return jax.tree.map(
+        lambda p: _leaf_sharding(rules, p.shape, logical, prefer_last=serve),
+        params)
+
+
+def batch_shardings(rules: ShardingRules, batch: Any) -> Any:
+    """Batch trees shard dim 0 over dp, everything else replicated."""
+    return jax.tree.map(
+        lambda b: rules.named(
+            b.shape, (["dp"] + [None] * (len(b.shape) - 1)) if b.shape else []),
+        batch)
+
+
+def cache_shardings(rules: ShardingRules, cache: Any) -> Any:
+    """KV/recurrent caches shard their batch dim.  Stacked (scanned) caches
+    carry a leading layer-cycle axis, so the batch dim is dim 0 or dim 1
+    depending on the leaf; shard the first dp-divisible of the two (both are
+    safe: each is uniform across devices, and spec() drops non-divisible
+    axes)."""
+    def one(c):
+        if not c.shape:
+            return rules.named((), [])
+        axes: List[Optional[str]] = [None] * len(c.shape)
+        # prefer the first dp-divisible dim among the leading two (layer
+        # stack axis for scanned caches, batch otherwise)
+        group = rules.axis_size("dp")
+        for i in range(min(2, len(c.shape))):
+            if group > 1 and c.shape[i] % group == 0:
+                axes[i] = "dp"
+                break
+        return rules.named(c.shape, axes)
+    return jax.tree.map(one, cache)
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Elastic re-shard: move a live state tree onto (possibly different-mesh)
+    shardings.  Used after an elastic restart when the device set changed."""
+    return jax.device_put(tree, shardings)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    """Tree of fully-replicated NamedShardings on `mesh`."""
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, P(*([None] * len(x.shape)))), tree)

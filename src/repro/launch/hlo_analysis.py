@@ -246,19 +246,28 @@ def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
     return m.group(1), dims
 
 
-def _op_name_types(args: str) -> List[str]:
-    """Operand list of a dot: '%a, %b' (no types in compiled HLO) or typed."""
-    return [a.strip() for a in args.split(",")]
+def _lhs_dims(args: str, op_shape: Dict[str, List[int]]) -> List[int]:
+    """LHS operand dims of a dot.  Compiled HLO writes TYPED operands —
+    `dot(f32[16,32]{1,0} %Arg_0.1, f32[32,8]{1,0} %Arg_1.2)` — so the shape
+    is read straight off the operand text (naively splitting the arg list on
+    ',' would cut `f32[16,32]` in half and lose the contracting dims, a
+    silent ~K-fold FLOP undercount).  Unoptimized-HLO operand lists are
+    name-only (`dot(%a, %b)`); those fall back to the definition map."""
+    typed = _SHAPE_RE.findall(args)
+    if typed:
+        return [int(d) for d in typed[0][1].split(",") if d]
+    first = args.split(",")[0].strip().lstrip("%")
+    return op_shape.get(first, [])
 
 
 def parse_dot_flops(hlo: str) -> float:
-    """Sum 2*M*N*K over every dot in the module, multiplied by the enclosing
-    while-loop trip product.  Operand shapes are looked up from the operand
-    definitions within the same module text."""
+    """Sum 2 * prod(out_dims) * prod(contracting_dims) over every dot in the
+    module, multiplied by the enclosing while-loop trip product.  out_dims
+    carries the batch dims, so batched dots are fully counted."""
     blocks = _computation_blocks(hlo)
     mults = _computation_multipliers(hlo, blocks)
 
-    # map op name -> result dims (global, across computations; names unique)
+    # map op name -> result dims (fallback for untyped operand lists)
     def_re = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*([^=]+?)\s*"
                         r"([a-z][\w\-]*)\(")
     op_shape: Dict[str, List[int]] = {}
@@ -278,9 +287,7 @@ def parse_dot_flops(hlo: str) -> float:
             if not dm:
                 continue
             _, out_dims = _shape_dims(dm.group("out"))
-            operands = _op_name_types(dm.group("args"))
-            lhs_name = operands[0].lstrip("%") if operands else ""
-            lhs_dims = op_shape.get(lhs_name, [])
+            lhs_dims = _lhs_dims(dm.group("args"), op_shape)
             lc = [int(x) for x in dm.group("lc").split(",") if x]
             k = 1
             for ci in lc:

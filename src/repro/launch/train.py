@@ -92,7 +92,13 @@ def main():
     finally:
         prefetch.stop()
     dt = time.time() - t0
-    tokens = args.steps * args.batch * args.seq_len
+    if not losses:
+        # resumed a checkpoint dir that already reached --steps: nothing to
+        # replay (idempotent restart) — report and exit clean
+        print(f"arch={cfg.name} steps={steps} restarts={restarts} "
+              f"(already complete in {args.ckpt_dir}; no steps run)")
+        return 0
+    tokens = len(losses) * args.batch * args.seq_len
     print(f"arch={cfg.name} steps={steps} restarts={restarts} "
           f"loss[0]={losses[0]:.4f} loss[-1]={losses[-1]:.4f} "
           f"({tokens / dt:.0f} tok/s wall)")

@@ -79,7 +79,6 @@ class ConcurrentServeScheduler:
         gq = global_queue(queues, self.n_groups, q, self.alpha)
 
         admitted: List[Request] = []
-        selected = set(int(g) for g in gq)
         # round-robin across streams within selected groups (fair sharing)
         for g in gq:
             for stream in self.streams.values():

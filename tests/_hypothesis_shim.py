@@ -1,0 +1,87 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface used
+by this repo's property tests (given / settings / strategies.integers,
+floats, sampled_from).
+
+Registered by tests/conftest.py ONLY when the real hypothesis package is not
+installed (the CI image bakes in the jax toolchain but not hypothesis).
+Examples are drawn from a fixed-seed RNG so runs are deterministic; on
+failure the falsifying example is attached to the raised error.  It is a
+shim, not a replacement: no shrinking, no database, no assume().
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 50
+_SEED = 0x5EED
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        pool = list(elements)
+        return _Strategy(lambda rng: pool[int(rng.integers(len(pool)))])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: _Strategy):
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            rng = np.random.default_rng(_SEED)
+            for _ in range(n):
+                drawn: Dict[str, Any] = {k: s.draw(rng)
+                                         for k, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (hypothesis shim): "
+                        f"{fn.__name__}({drawn!r})") from e
+        # plain attribute copies, NOT functools.wraps: pytest must see a
+        # zero-arg signature, not fn's strategy parameters (it would try to
+        # resolve them as fixtures)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples",
+                                             _DEFAULT_MAX_EXAMPLES)
+        return wrapper
+    return deco

@@ -1,0 +1,19 @@
+"""Test bootstrap: src/ on sys.path (belt-and-braces next to the pyproject
+pythonpath setting, so bare `pytest tests/...` works from any cwd) and a
+deterministic hypothesis shim when the real package is absent."""
+
+import importlib.util
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+if importlib.util.find_spec("hypothesis") is None:
+    _shim_path = os.path.join(os.path.dirname(__file__),
+                              "_hypothesis_shim.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _shim_path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod

@@ -1,0 +1,95 @@
+"""Regression tests for De_Gl_Priority (core.global_q.global_queue) edge
+cases and the serve-scheduler path that feeds it (added alongside the
+dead-code cleanup in serve/concurrent.py::schedule_step)."""
+
+import numpy as np
+
+from repro.core.global_q import global_queue
+from repro.serve.concurrent import (ConcurrentServeScheduler, Request,
+                                    RequestStream)
+
+
+# --- global_queue edges ------------------------------------------------------
+
+def test_all_empty_job_queues():
+    jq = [np.empty(0, dtype=np.int64) for _ in range(4)]
+    assert len(global_queue(jq, num_blocks=16, q=4)) == 0
+
+
+def test_no_job_queues_at_all():
+    assert len(global_queue([], num_blocks=16, q=4)) == 0
+
+
+def test_alpha_one_no_reserved_slots():
+    # alpha=1.0: the whole queue comes from cumulative priority; job C's
+    # singleton head (block 9) only enters if cumulative weight earns it
+    jq = [np.array([1, 2, 3, 4]), np.array([1, 2, 3, 4]), np.array([9])]
+    gq = global_queue(jq, num_blocks=12, q=4, alpha=1.0)
+    assert len(gq) <= 4
+    assert len(set(gq.tolist())) == len(gq)
+    # blocks 1..4 carry weight 2q+.. vs block 9's single q: top slot is 1
+    assert gq[0] == 1
+
+
+def test_alpha_one_still_fills_from_heads_when_short():
+    # alpha=1.0 but only 2 distinct candidate blocks for q=4: the queue is
+    # allowed to come up short, never padded with converged blocks
+    jq = [np.array([3]), np.array([5])]
+    gq = global_queue(jq, num_blocks=8, q=4, alpha=1.0)
+    assert set(gq.tolist()) == {3, 5}
+
+
+def test_duplicate_heads_across_jobs_counted_once_in_queue():
+    # every job heads the same block: it must appear exactly once, first
+    jq = [np.array([7, 1]), np.array([7, 2]), np.array([7, 3])]
+    gq = global_queue(jq, num_blocks=10, q=4)
+    assert gq[0] == 7
+    assert list(gq).count(7) == 1
+    assert len(set(gq.tolist())) == len(gq)
+
+
+def test_queue_longer_than_q_never_returned():
+    jq = [np.arange(9), np.arange(9)[::-1].copy()]
+    gq = global_queue(jq, num_blocks=9, q=3, alpha=0.5)
+    assert len(gq) <= 3
+
+
+def test_reserved_slot_rotation_terminates_on_exhausted_queues():
+    # queues shorter than the reserve depth: the fill loop must not spin
+    jq = [np.array([0]), np.array([1])]
+    gq = global_queue(jq, num_blocks=4, q=4, alpha=0.25)
+    assert set(gq.tolist()) == {0, 1}
+
+
+# --- serve scheduler feeding the same policy --------------------------------
+
+def test_schedule_step_all_streams_empty():
+    sched = ConcurrentServeScheduler(n_groups=4, batch_budget=4, seed=0)
+    sched.add_stream(RequestStream(1))
+    sched.add_stream(RequestStream(2))
+    assert sched.schedule_step() == []
+
+
+def test_schedule_step_budget_overflow_fills_from_any_group():
+    sched = ConcurrentServeScheduler(n_groups=4, batch_budget=3, seed=0)
+    s = RequestStream(1)
+    sched.add_stream(s)
+    for g in range(4):
+        s.add(Request(1, g, urgency=1.0, tokens_left=5))
+    admitted = sched.schedule_step()
+    assert len(admitted) == 3
+    assert len(s.waiting) == 1
+
+
+def test_schedule_step_duplicate_hot_group_across_streams():
+    sched = ConcurrentServeScheduler(n_groups=8, batch_budget=2, seed=0)
+    s1, s2 = RequestStream(1), RequestStream(2)
+    sched.add_stream(s1)
+    sched.add_stream(s2)
+    s1.add(Request(1, 5, urgency=9.0, tokens_left=5))
+    s2.add(Request(2, 5, urgency=9.0, tokens_left=5))
+    admitted = sched.schedule_step()
+    # the shared hot group serves both streams within budget, one each
+    assert len(admitted) == 2
+    assert {r.stream_id for r in admitted} == {1, 2}
+    assert all(r.group == 5 for r in admitted)

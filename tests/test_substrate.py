@@ -123,6 +123,56 @@ def test_restart_manager_recovers_from_failures(tmp_path):
                                np.asarray(ref["params"]["w"]), rtol=1e-5)
 
 
+def test_restart_manager_survives_donated_state_and_early_failure(tmp_path):
+    """Production callers jit the step with donate_argnums=(0,), so the
+    initial state's buffers are DEAD after step 1.  A preemption before the
+    first periodic checkpoint must still recover (from the step-0 snapshot),
+    never from the deleted initial buffers."""
+    cfg = AdamWConfig(peak_lr=0.05, warmup_steps=1, total_steps=100,
+                      weight_decay=0.0, schedule="const")
+
+    def raw_step(state, batch):
+        def loss(p):
+            return jnp.sum((p["w"] - batch) ** 2)
+        g = jax.grad(loss)(state["params"])
+        new_p, new_opt, m = adamw_update(cfg, g, state["opt"],
+                                         state["params"])
+        return {"params": new_p, "opt": new_opt}, m
+
+    def data_fn(step):
+        return jnp.asarray(np.random.default_rng(step).standard_normal(4),
+                           jnp.float32)
+
+    def make_init():
+        return {"params": {"w": jnp.zeros(4)},
+                "opt": adamw_init({"w": jnp.zeros(4)})}
+
+    # uninterrupted reference (on its own buffers)
+    ref = make_init()
+    for s in range(12):
+        ref, _ = raw_step(ref, data_fn(s))
+
+    def donating_step(state, batch):
+        out = raw_step(state, batch)
+        for leaf in jax.tree_util.tree_leaves(state):
+            leaf.delete()          # emulate donate_argnums=(0,)
+        return out
+
+    fails = {2}
+
+    def failure_hook(step):
+        if step in fails:
+            fails.remove(step)
+            raise RuntimeError("early preemption")
+
+    mgr = RestartManager(str(tmp_path / "ckpt"), save_every=10)
+    state, steps, restarts = mgr.run(make_init(), donating_step, data_fn, 12,
+                                     failure_hook=failure_hook)
+    assert steps == 12 and restarts == 1
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]),
+                               np.asarray(ref["params"]["w"]), rtol=1e-5)
+
+
 def test_straggler_watchdog():
     wd = StragglerWatchdog(window=8, threshold=2.0)
     for s in range(8):
