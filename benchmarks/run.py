@@ -17,6 +17,10 @@
                              — tile loads + supersteps vs device count.
                              Meaningful with several devices, e.g.
                              XLA_FLAGS=--xla_force_host_platform_device_count=4
+  fig_arrival              : staggered job arrivals into ONE long-lived
+                             GraphSession (submit mid-run, shared staging
+                             continues) vs restarting a static engine on
+                             every arrival — tile loads and makespan.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modes are selectable:
 ``python benchmarks/run.py [mode ...]`` (default: all).
@@ -169,6 +173,49 @@ def fig_scaling():
             f"job_pushes_per_device={m.job_block_pushes / d:.0f}")
 
 
+def fig_arrival():
+    """The api_redesign claim: a long-lived session absorbs arrivals without
+    restarting.  `session_*` submits each job into the running GraphSession
+    every `gap` supersteps; `restart_*` models the static API — every
+    arrival rebuilds the whole job set and re-runs it from scratch."""
+    from repro.core import GraphSession, TwoLevel
+
+    csr = rmat_graph(800, 8, seed=7)
+    n_arrivals, gap = 4, 10
+    algs = _jobs(n_arrivals)
+
+    t0 = time.time()
+    sess = GraphSession(csr, 64, capacity=n_arrivals, seed=0)
+    policy = TwoLevel()
+    handles, s_loads, s_steps = [], 0, 0
+    for alg in algs:
+        handles.append(sess.submit(alg))
+        m = sess.run(policy, max_supersteps=gap)
+        s_loads += m.tile_loads
+        s_steps += m.supersteps
+    m = sess.run(policy, 50000)
+    assert m.converged
+    s_loads += m.tile_loads
+    s_steps += m.supersteps
+    t_sess = time.time() - t0
+
+    t0 = time.time()
+    r_loads = r_steps = 0
+    for k in range(1, n_arrivals + 1):
+        eng = ConcurrentEngine(make_run(algs[:k], csr, 64), seed=0)
+        mk = eng.run_two_level(50000)
+        assert mk.converged
+        r_loads += mk.tile_loads
+        r_steps += mk.supersteps
+    t_restart = time.time() - t0
+
+    row("fig_arrival", t_sess * 1e6 / max(s_steps, 1),
+        f"session_tile_loads={s_loads};restart_tile_loads={r_loads};"
+        f"session_supersteps={s_steps};restart_supersteps={r_steps};"
+        f"session_makespan_s={t_sess:.2f};restart_makespan_s={t_restart:.2f};"
+        f"load_saving={r_loads / max(s_loads, 1):.2f}x")
+
+
 MODES = {
     "fig4_5_memory_redundancy": fig4_5_memory_redundancy,
     "fig_convergence": fig_convergence,
@@ -176,6 +223,7 @@ MODES = {
     "tab_do_cost": tab_do_cost,
     "tab_kernel": tab_kernel,
     "fig_scaling": fig_scaling,
+    "fig_arrival": fig_arrival,
 }
 
 

@@ -11,8 +11,6 @@ concurrent shortest-path queries on the same graph).  Demonstrates:
 
 import time
 
-import numpy as np
-
 from repro.algorithms import SSSP
 from repro.core import ConcurrentEngine, make_run
 from repro.graph import grid_graph

@@ -1,12 +1,26 @@
-"""The paper's primary contribution: two-level scheduling (MPDS + CAJS)."""
+"""The paper's primary contribution: two-level scheduling (MPDS + CAJS).
+
+Public surface (see docs/API.md for the migration guide):
+
+  GraphSession / JobHandle      - job-lifecycle API (submit/run/result/detach)
+  SchedulePolicy + TwoLevel,
+  Fused, Independent, AllBlocks - pluggable schedules over a session
+  TwoLevelScheduler             - the scheduling core (pairs -> DO queues ->
+                                  global queue), shared with repro.serve
+  ConcurrentEngine / make_run   - legacy fixed-job-set shim (kept working)
+"""
 
 from repro.core.priority import block_pairs, cbp, do_score, EPS_FACTOR
 from repro.core.do_select import do_select, DEFAULT_SAMPLES
 from repro.core.global_q import global_queue, DEFAULT_ALPHA
-from repro.core.engine import (
-    ConcurrentEngine, ConcurrentRun, RunMetrics, make_run,
-    optimal_queue_length, push_plus_one, push_min_one, compute_pairs,
-)
+from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
+                                  PRITER_C)
+from repro.core.push import push_plus_one, push_min_one, compute_pairs
+from repro.core.policy import (RunMetrics, Selection, SchedulePolicy,
+                               TwoLevel, Fused, Independent, AllBlocks,
+                               POLICIES)
+from repro.core.session import GraphSession, JobHandle
+from repro.core.engine import ConcurrentEngine, ConcurrentRun, make_run
 from repro.core.api import (initPtable, De_In_Priority, De_Gl_Priority,
                             Con_processing)
 
@@ -14,7 +28,11 @@ __all__ = [
     "block_pairs", "cbp", "do_score", "EPS_FACTOR",
     "do_select", "DEFAULT_SAMPLES",
     "global_queue", "DEFAULT_ALPHA",
-    "ConcurrentEngine", "ConcurrentRun", "RunMetrics", "make_run",
-    "optimal_queue_length", "push_plus_one", "push_min_one", "compute_pairs",
+    "TwoLevelScheduler", "optimal_queue_length", "PRITER_C",
+    "push_plus_one", "push_min_one", "compute_pairs",
+    "RunMetrics", "Selection", "SchedulePolicy",
+    "TwoLevel", "Fused", "Independent", "AllBlocks", "POLICIES",
+    "GraphSession", "JobHandle",
+    "ConcurrentEngine", "ConcurrentRun", "make_run",
     "initPtable", "De_In_Priority", "De_Gl_Priority", "Con_processing",
 ]

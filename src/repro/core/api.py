@@ -1,32 +1,37 @@
-"""The paper's user-facing API (§4.4), mapped onto the engine.
+"""The paper's user-facing API (§4.4), mapped onto the redesigned core.
 
   initPtable     - per-block initial priority state for a newly-arrived job
-  De_In_Priority - per-job block priority queue (pairs + Function 2)
-  De_Gl_Priority - global priority queue (Fig. 7 synthesis)
-  Con_processing - schedule all jobs over the global queue (CAJS push)
+                   (what `GraphSession.submit` runs when a job arrives)
+  De_In_Priority - per-job block priority queue (pairs + Function 2;
+                   `TwoLevelScheduler.job_queues`)
+  De_Gl_Priority - global priority queue (Fig. 7 synthesis;
+                   `TwoLevelScheduler.synthesize`)
+  Con_processing - schedule all jobs over the global queue (the CAJS push
+                   one `TwoLevel.select` + shared push performs per step)
 
 These are thin, composable wrappers so a "traditional" engine can adopt the
-two strategies incrementally, exactly as the paper prescribes.
+two strategies incrementally, exactly as the paper prescribes.  The
+session/policy API (docs/API.md) is the batteries-included version of the
+same four steps.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.algorithms.base import Algorithm
-from repro.core.do_select import do_select, DEFAULT_SAMPLES
-from repro.core.engine import (ConcurrentRun, compute_pairs, push_plus_one,
-                               push_min_one, optimal_queue_length)
-from repro.core.global_q import global_queue, DEFAULT_ALPHA
-from repro.algorithms.base import PLUS_TIMES
-
-import jax
+from repro.algorithms.base import Algorithm, PLUS_TIMES
+from repro.core.do_select import DEFAULT_SAMPLES
+from repro.core.engine import ConcurrentRun
+from repro.core.global_q import DEFAULT_ALPHA
+from repro.core.push import compute_pairs, push_plus_one, push_min_one
+from repro.core.scheduler import TwoLevelScheduler
 
 
-def initPtable(alg: Algorithm, graph) -> tuple[jnp.ndarray, jnp.ndarray]:
+def initPtable(alg: Algorithm, graph) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Initial (values, deltas) for a new job — every block starts with the
     same priority (paper step 2: 'priority values ... set to the same in the
     first iteration'), which falls out of the algorithm's uniform init."""
@@ -38,13 +43,14 @@ def De_In_Priority(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray,
                    samples: int = DEFAULT_SAMPLES) -> List[np.ndarray]:
     """Per-job priority queues for stacked [J, B_N, Vb] state."""
     node_un, p_mean = map(np.asarray, compute_pairs(alg, values, deltas))
-    return [do_select(node_un[j], p_mean[j], q, rng, samples)
-            for j in range(values.shape[0])]
+    sched = TwoLevelScheduler(node_un.shape[1], q, samples=samples)
+    sched.rng = rng  # caller-owned stream, paper-API style
+    return sched.job_queues(node_un, p_mean)
 
 
 def De_Gl_Priority(job_queues: Sequence[np.ndarray], num_blocks: int, q: int,
                    alpha: float = DEFAULT_ALPHA) -> np.ndarray:
-    return global_queue(job_queues, num_blocks, q, alpha)
+    return TwoLevelScheduler(num_blocks, q, alpha=alpha).synthesize(job_queues)
 
 
 def Con_processing(run: ConcurrentRun, gq: np.ndarray, q: int):

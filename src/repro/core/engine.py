@@ -1,130 +1,43 @@
-"""Concurrent multi-job engine: CAJS + MPDS over a shared BlockedGraph.
+"""Legacy concurrent-engine API, now a thin shim over GraphSession.
 
-Execution modes (all produce identical fixpoints, different schedules):
+`make_run` + `ConcurrentEngine.run_two_level/run_fused/run_independent/
+run_all_blocks` predate the job-lifecycle redesign: they declare a FIXED
+job set up-front and run it to a joint fixpoint.  They are kept as a
+compatibility surface — each run_* call drives a GraphSession under the
+matching SchedulePolicy with capacity == J (no padding) and a freshly
+reset scheduler RNG, which makes the shim bit-identical to the historical
+loops.  New code should use repro.core.session.GraphSession directly
+(dynamic submit/detach, pluggable policies); see docs/API.md.
 
-  "two_level"   - the paper: per-job DO queues -> global queue -> one staging
-                  of each selected block serves ALL jobs (CAJS).  Scheduling
-                  decisions on host (faithful Job Controller), pushes on
-                  device.
-  "fused"       - beyond-paper: the whole loop (priority pairs, DO-order
-                  top-q, global accumulation, push, convergence test) is a
-                  single lax.while_loop on device; no host round-trips.
-  "independent" - redundancy baseline: each job selects and processes its own
-                  queue (per-job tile staging), modelling the paper's Fig. 3
-                  "current mode" of concurrent access.
-  "all_blocks"  - non-prioritized baseline: every block, every superstep
-                  (classic synchronous engine shared across jobs).
-
-Metrics: `tile_loads` counts block stagings (HBM->VMEM transfers of adjacency
-tiles).  In two_level/all_blocks a staged tile serves all J jobs; independent
-pays J separate stagings — the paper's memory-access redundancy, measurable.
+Metrics: `tile_loads` counts block stagings (HBM->VMEM transfers of
+adjacency tiles).  In two_level/all_blocks a staged tile serves all J jobs;
+independent pays J separate stagings — the paper's memory-access
+redundancy, measurable.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.algorithms.base import Algorithm, PLUS_TIMES, MIN_PLUS
-from repro.core import priority as prio
-from repro.core.do_select import do_select, DEFAULT_SAMPLES
-from repro.core.global_q import global_queue, DEFAULT_ALPHA
+from repro.algorithms.base import Algorithm
+from repro.core.do_select import DEFAULT_SAMPLES
+from repro.core.global_q import DEFAULT_ALPHA
+from repro.core.policy import (RunMetrics, SchedulePolicy, TwoLevel, Fused,
+                               Independent, AllBlocks)
+from repro.core.push import compute_pairs, push_plus_one, push_min_one
+from repro.core.scheduler import PRITER_C, optimal_queue_length
+from repro.core.session import GraphSession
 from repro.graph.structure import BlockedGraph, build_blocked, CSRGraph
 
-PRITER_C = 100.0  # paper §5.1: q = C * B_N / sqrt(V_N), C = 100
-
-
-def optimal_queue_length(num_blocks: int, n_vertices: int,
-                         c: float = PRITER_C) -> int:
-    q = int(c * num_blocks / math.sqrt(max(n_vertices, 1)))
-    return max(1, min(q, num_blocks))
-
-
-# ---------------------------------------------------------------------------
-# single-job pushes (vmapped over jobs by the engine)
-# ---------------------------------------------------------------------------
-
-def _block_mask(sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
-                num_blocks: int) -> jnp.ndarray:
-    """[q] ids + validity mask -> dense [B_N] bool, scatter-hazard free."""
-    m = jnp.zeros((num_blocks,), dtype=jnp.bool_)
-    return m.at[sel_ids].max(sel_mask > 0)
-
-
-def push_plus_one(values: jnp.ndarray, deltas: jnp.ndarray,
-                  tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
-                  sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
-                  push_scale: jnp.ndarray):
-    """One job, PLUS_TIMES semiring. values/deltas [B_N, Vb]."""
-    consumed = _block_mask(sel_ids, sel_mask, values.shape[0])[:, None]
-    raw = jnp.where(consumed, deltas, 0.0)
-    # mask padded selection slots: a padded slot aliases block 0 and must not
-    # re-push block 0's delta when block 0 is itself selected
-    d_sel = raw[sel_ids] * push_scale * sel_mask[:, None]  # [q, Vb]
-    t_sel = tiles[sel_ids]                                # [q, K, Vb, Vb]
-    contrib = jnp.einsum("qv,qkvw->qkw", d_sel, t_sel)    # [q, K, Vb]
-    values = values + raw
-    deltas = deltas - raw
-    dst = nbr_ids[sel_ids].reshape(-1)                    # [q*K]
-    deltas = deltas.at[dst].add(
-        contrib.reshape(-1, contrib.shape[-1]), mode="drop")
-    return values, deltas
-
-
-def push_min_one(values: jnp.ndarray, deltas: jnp.ndarray,
-                 tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
-                 sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
-                 push_scale: jnp.ndarray):
-    """One job, MIN_PLUS semiring (push_scale unused, kept for signature)."""
-    del push_scale
-    bn = values.shape[0]
-    consumed = _block_mask(sel_ids, sel_mask, bn)[:, None]
-    d_sel = jnp.where(consumed, deltas, jnp.inf)[sel_ids]   # [q, Vb]
-    d_sel = jnp.where(sel_mask[:, None] > 0, d_sel, jnp.inf)
-    deltas = jnp.where(consumed, jnp.inf, deltas)
-    t_sel = tiles[sel_ids]                                   # [q, K, Vb, Vb]
-    nbr_sel = nbr_ids[sel_ids]                               # [q, K]
-
-    def body(carry, inp):
-        values, deltas = carry
-        t_k, dst_k = inp                                     # [q,Vb,Vb], [q]
-        contrib = jnp.min(d_sel[:, :, None] + t_k, axis=1)   # [q, Vb]
-        old = values[dst_k]
-        values = values.at[dst_k].min(contrib)
-        new = values[dst_k]
-        improved = new < old
-        deltas = deltas.at[dst_k].min(jnp.where(improved, new, jnp.inf))
-        return (values, deltas), None
-
-    (values, deltas), _ = jax.lax.scan(
-        body, (values, deltas),
-        (jnp.swapaxes(t_sel, 0, 1), jnp.swapaxes(nbr_sel, 0, 1)))
-    return values, deltas
-
-
-def compute_pairs(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray):
-    """[J, B_N, Vb] -> (node_un [J,B_N], p_mean [J,B_N])."""
-    p = alg.vertex_priority(values, deltas)
-    return prio.block_pairs(p)
-
-
-# ---------------------------------------------------------------------------
-# engine
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class RunMetrics:
-    supersteps: int = 0
-    tile_loads: int = 0            # adjacency-block stagings (HBM->VMEM)
-    job_block_pushes: int = 0      # (job, block) processing events
-    iterations_per_job: Optional[np.ndarray] = None
-    converged: bool = False
+__all__ = [
+    "ConcurrentEngine", "ConcurrentRun", "RunMetrics", "make_run",
+    "optimal_queue_length", "PRITER_C",
+    "push_plus_one", "push_min_one", "compute_pairs",
+]
 
 
 @dataclasses.dataclass
@@ -170,7 +83,7 @@ def make_run(algs: Sequence[Algorithm], csr: CSRGraph,
 
 
 class ConcurrentEngine:
-    """Runs a ConcurrentRun to convergence under a chosen schedule."""
+    """Runs a ConcurrentRun to convergence under a chosen schedule (shim)."""
 
     def __init__(self, run: ConcurrentRun, *,
                  c: float = PRITER_C,
@@ -178,73 +91,60 @@ class ConcurrentEngine:
                  samples: int = DEFAULT_SAMPLES,
                  seed: int = 0,
                  use_pallas: bool = False):
+        self.session = GraphSession.from_run(
+            run, c=c, alpha=alpha, samples=samples, seed=seed,
+            use_pallas=use_pallas)
         self.run = run
-        self.alpha = alpha
-        self.samples = samples
-        self.seed = seed
-        self.use_pallas = use_pallas
-        g = run.graph
-        self.q = optimal_queue_length(g.num_blocks, g.n_real, c)
-        self._push_one = (push_plus_one if run.algs[0].semiring == PLUS_TIMES
-                          else push_min_one)
-        if use_pallas:
-            from repro.kernels.mj_spmm import ops as mj_ops
-            self._push_shared_fn = partial(
-                mj_ops.push_shared, semiring=run.algs[0].semiring)
-        self._jit_cache = {}
 
-    # -- jitted primitives --------------------------------------------------
+    # configuration lives on the session/scheduler; these properties keep the
+    # historical attributes readable AND writable (mutating eng.alpha between
+    # run_* calls used to take effect, so delegate instead of copying)
 
-    def _pairs(self):
-        key = "pairs"
-        if key not in self._jit_cache:
-            alg = self.run.algs[0]
-            self._jit_cache[key] = jax.jit(
-                lambda v, d: compute_pairs(alg, v, d))
-        return self._jit_cache[key]
+    @property
+    def q(self) -> int:
+        return self.session.q
 
-    def _push_shared(self):
-        """All jobs process the same selected blocks (CAJS)."""
-        key = ("push_shared", self.use_pallas)
-        if key not in self._jit_cache:
-            if self.use_pallas:
-                fn = self._push_shared_fn
-                self._jit_cache[key] = jax.jit(
-                    lambda v, d, t, n, si, sm, ps: fn(v, d, t, n, si, sm, ps))
-            else:
-                push = self._push_one
-                self._jit_cache[key] = jax.jit(jax.vmap(
-                    push, in_axes=(0, 0, None, None, None, None, 0)))
-        return self._jit_cache[key]
+    @property
+    def seed(self) -> int:
+        return self.session.seed
 
-    def _push_indep(self):
-        """Each job processes its own selection (redundancy baseline)."""
-        key = "push_indep"
-        if key not in self._jit_cache:
-            push = self._push_one
-            self._jit_cache[key] = jax.jit(jax.vmap(
-                push, in_axes=(0, 0, None, None, 0, 0, 0)))
-        return self._jit_cache[key]
+    @seed.setter
+    def seed(self, value: int) -> None:
+        self.session.seed = value
 
-    def _unconverged_counts(self):
-        key = "counts"
-        if key not in self._jit_cache:
-            alg = self.run.algs[0]
-            self._jit_cache[key] = jax.jit(
-                lambda v, d: jnp.sum(alg.unconverged(v, d), axis=(1, 2)))
-        return self._jit_cache[key]
+    @property
+    def alpha(self) -> float:
+        return self.session.alpha
 
-    # -- runs ----------------------------------------------------------------
+    @alpha.setter
+    def alpha(self, value: float) -> None:
+        self.session.alpha = value
 
-    def _place(self, mesh) -> None:
-        """Shard the job axis over `mesh` (repro.dist.graph): tiles
-        replicated per device, values/deltas job-sharded.  Scheduling below
-        is unchanged — SPMD partitions the vmapped pushes along the job axis,
-        so per-job arithmetic (and the fixpoint) is identical."""
-        if mesh is None:
-            return
-        from repro.dist.graph import shard_run
-        self.run = shard_run(self.run, mesh)
+    @property
+    def samples(self) -> int:
+        return self.session.samples
+
+    @samples.setter
+    def samples(self, value: int) -> None:
+        self.session.samples = value
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.session.use_pallas
+
+    @use_pallas.setter
+    def use_pallas(self, value: bool) -> None:
+        self.session.use_pallas = value
+
+    def _drive(self, policy: SchedulePolicy, max_supersteps: int,
+               mesh=None) -> RunMetrics:
+        # historical behaviour: every run_* call restarted its RNG from seed
+        self.session.scheduler.reset()
+        m = self.session.run(policy, max_supersteps, mesh=mesh)
+        self.run = dataclasses.replace(
+            self.run, values=self.session.values, deltas=self.session.deltas,
+            push_scale=self.session.push_scale)
+        return m
 
     def run_two_level(self, max_supersteps: int = 100000, *,
                       mesh=None) -> RunMetrics:
@@ -253,100 +153,15 @@ class ConcurrentEngine:
         mesh: optional jax.sharding.Mesh (e.g. dist.graph.make_job_mesh());
         J jobs are sharded across its devices, each device staging selected
         blocks once for its local jobs (per-device CAJS)."""
-        self._place(mesh)
-        r, g = self.run, self.run.graph
-        rng = np.random.default_rng(self.seed)
-        m = RunMetrics(iterations_per_job=np.zeros(r.num_jobs, dtype=np.int64))
-        pairs_fn, push_fn = self._pairs(), self._push_shared()
-        counts_fn = self._unconverged_counts()
-        values, deltas = r.values, r.deltas
-        q = self.q
-        for step in range(max_supersteps):
-            counts = np.asarray(counts_fn(values, deltas))
-            active = counts > 0
-            m.iterations_per_job[active] += 1
-            if not active.any():
-                m.converged = True
-                break
-            node_un, p_mean = map(np.asarray, pairs_fn(values, deltas))
-            queues = [do_select(node_un[j], p_mean[j], q, rng, self.samples)
-                      if active[j] else np.empty(0, dtype=np.int64)
-                      for j in range(r.num_jobs)]
-            gq = global_queue(queues, g.num_blocks, q, self.alpha)
-            if len(gq) == 0:
-                m.converged = True
-                break
-            sel = np.zeros(q, dtype=np.int32)
-            msk = np.zeros(q, dtype=np.float32)
-            sel[:len(gq)] = gq[:q]
-            msk[:len(gq)] = 1.0
-            values, deltas = push_fn(values, deltas, g.tiles, g.nbr_ids,
-                                     jnp.asarray(sel), jnp.asarray(msk),
-                                     r.push_scale)
-            m.supersteps += 1
-            m.tile_loads += int(len(gq))
-            # CAJS: staged once, dispatched only to jobs unconverged on the block
-            m.job_block_pushes += int((node_un[:, gq] > 0).sum())
-        self.run = dataclasses.replace(r, values=values, deltas=deltas)
-        return m
+        return self._drive(TwoLevel(), max_supersteps, mesh)
 
     def run_independent(self, max_supersteps: int = 100000) -> RunMetrics:
         """Per-job queues processed separately (paper Fig. 3 'current mode')."""
-        r, g = self.run, self.run.graph
-        rng = np.random.default_rng(self.seed)
-        m = RunMetrics(iterations_per_job=np.zeros(r.num_jobs, dtype=np.int64))
-        pairs_fn, push_fn = self._pairs(), self._push_indep()
-        counts_fn = self._unconverged_counts()
-        values, deltas = r.values, r.deltas
-        q = self.q
-        for step in range(max_supersteps):
-            counts = np.asarray(counts_fn(values, deltas))
-            active = counts > 0
-            m.iterations_per_job[active] += 1
-            if not active.any():
-                m.converged = True
-                break
-            node_un, p_mean = map(np.asarray, pairs_fn(values, deltas))
-            sel = np.zeros((r.num_jobs, q), dtype=np.int32)
-            msk = np.zeros((r.num_jobs, q), dtype=np.float32)
-            for j in range(r.num_jobs):
-                if not active[j]:
-                    continue
-                qj = do_select(node_un[j], p_mean[j], q, rng, self.samples)
-                sel[j, :len(qj)] = qj[:q]
-                msk[j, :len(qj)] = 1.0
-                m.tile_loads += int(len(qj))       # each job stages its own
-                m.job_block_pushes += int(len(qj))
-            values, deltas = push_fn(values, deltas, g.tiles, g.nbr_ids,
-                                     jnp.asarray(sel), jnp.asarray(msk),
-                                     r.push_scale)
-            m.supersteps += 1
-        self.run = dataclasses.replace(r, values=values, deltas=deltas)
-        return m
+        return self._drive(Independent(), max_supersteps)
 
     def run_all_blocks(self, max_supersteps: int = 100000) -> RunMetrics:
         """Non-prioritized synchronous baseline: all blocks, shared staging."""
-        r, g = self.run, self.run.graph
-        m = RunMetrics(iterations_per_job=np.zeros(r.num_jobs, dtype=np.int64))
-        push_fn = self._push_shared()
-        counts_fn = self._unconverged_counts()
-        values, deltas = r.values, r.deltas
-        sel = jnp.arange(g.num_blocks, dtype=jnp.int32)
-        msk = jnp.ones(g.num_blocks, dtype=jnp.float32)
-        for step in range(max_supersteps):
-            counts = np.asarray(counts_fn(values, deltas))
-            active = counts > 0
-            m.iterations_per_job[active] += 1
-            if not active.any():
-                m.converged = True
-                break
-            values, deltas = push_fn(values, deltas, g.tiles, g.nbr_ids,
-                                     sel, msk, r.push_scale)
-            m.supersteps += 1
-            m.tile_loads += g.num_blocks
-            m.job_block_pushes += g.num_blocks * int(active.sum())
-        self.run = dataclasses.replace(r, values=values, deltas=deltas)
-        return m
+        return self._drive(AllBlocks(), max_supersteps)
 
     def run_fused(self, max_supersteps: int = 100000, *,
                   mesh=None) -> RunMetrics:
@@ -355,51 +170,7 @@ class ConcurrentEngine:
         mesh: optional Mesh; shards the job axis as in run_two_level.  The
         whole while_loop then runs SPMD with job state partitioned and one
         scalar all-reduce per superstep for the convergence test."""
-        self._place(mesh)
-        r, g = self.run, self.run.graph
-        alg = r.algs[0]
-        q, alpha = self.q, self.alpha
-        push = self._push_one
-        n_res = max(0, q - int(math.ceil(alpha * q)))  # reserved head slots
-
-        def body(carry):
-            it, values, deltas, loads = carry
-            node_un, p_mean = compute_pairs(alg, values, deltas)
-            score = prio.do_score(node_un, p_mean)          # [J, B_N]
-            topv, topi = jax.lax.top_k(score, q)            # per-job queues
-            valid = jnp.isfinite(topv)
-            w = jnp.arange(q, 0, -1, dtype=jnp.float32) * valid
-            gpri = jnp.zeros((g.num_blocks,), jnp.float32)
-            gpri = gpri.at[topi.reshape(-1)].add(w.reshape(-1))
-            # reserve: force per-job heads into the queue (device analogue of
-            # the paper's (1-alpha)q individual-head slots)
-            if n_res > 0:
-                heads = topi[:, 0]
-                head_valid = valid[:, 0]
-                gpri = gpri.at[heads].add(
-                    jnp.where(head_valid, 1e12, 0.0))
-            gv, gsel = jax.lax.top_k(gpri, q)
-            gmask = (gv > 0.0).astype(jnp.float32)
-            values, deltas = jax.vmap(
-                push, in_axes=(0, 0, None, None, None, None, 0))(
-                values, deltas, g.tiles, g.nbr_ids,
-                gsel.astype(jnp.int32), gmask, r.push_scale)
-            return it + 1, values, deltas, loads + jnp.sum(gmask)
-
-        def cond(carry):
-            it, values, deltas, _ = carry
-            un = jnp.sum(alg.unconverged(values, deltas))
-            return (un > 0) & (it < max_supersteps)
-
-        it, values, deltas, loads = jax.lax.while_loop(
-            cond, body, (jnp.int32(0), r.values, r.deltas, jnp.float32(0)))
-        self.run = dataclasses.replace(r, values=values, deltas=deltas)
-        m = RunMetrics()
-        m.supersteps = int(it)
-        m.tile_loads = int(loads)
-        m.converged = bool(int(it) < max_supersteps)
-        m.iterations_per_job = np.full(r.num_jobs, int(it), dtype=np.int64)
-        return m
+        return self._drive(Fused(), max_supersteps, mesh)
 
     # -- results ---------------------------------------------------------------
 

@@ -1,0 +1,233 @@
+"""Pluggable schedule policies over a GraphSession.
+
+One `step()/run()` driver replaces the four historical near-duplicate
+engine loops.  A policy decides, per superstep, WHICH blocks are staged and
+WHO processes them; the driver owns everything else (convergence test,
+metrics, the push dispatch).  All policies reach the same per-job fixpoint
+— they differ only in schedule and therefore in tile_loads / supersteps:
+
+  TwoLevel    - the paper: per-job DO queues -> global queue -> one staging
+                of each selected block serves ALL jobs (CAJS + MPDS).
+                Scheduling on host (faithful Job Controller), push on device.
+  Fused       - beyond-paper: the entire loop (priority pairs, top-q, global
+                accumulation, push, convergence test) is a single
+                lax.while_loop on device; no host round-trips.
+  Independent - redundancy baseline: each job selects and stages its own
+                queue (paper Fig. 3 "current mode").
+  AllBlocks   - non-prioritized baseline: every block, every superstep.
+
+Each policy composes with `mesh=` job-axis placement (repro.dist.graph):
+partitioning the vmapped job axis never changes per-job arithmetic, so the
+sharded run converges to the same fixpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import priority as prio
+from repro.core.push import compute_pairs
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    supersteps: int = 0
+    tile_loads: int = 0            # adjacency-block stagings (HBM->VMEM)
+    job_block_pushes: int = 0      # (job, block) processing events
+    iterations_per_job: Optional[np.ndarray] = None
+    converged: bool = False
+
+
+@dataclasses.dataclass
+class Selection:
+    """One superstep's staging decision, produced by a host policy."""
+
+    sel: np.ndarray          # [q] (shared staging) or [J, q] (per-job)
+    msk: np.ndarray          # same shape, 1.0 = valid slot
+    shared: bool             # True: one staging serves all jobs (CAJS)
+    tile_loads: int
+    job_block_pushes: int
+
+
+class SchedulePolicy:
+    """Base host-driven policy: subclasses implement `select`."""
+
+    name = "abstract"
+    needs_pairs = True  # driver computes <Node_un, P_mean> before select()
+
+    def select(self, sess, node_un: Optional[np.ndarray],
+               p_mean: Optional[np.ndarray],
+               active: np.ndarray) -> Optional[Selection]:
+        """Return the staging decision, or None when nothing is schedulable
+        (the driver then declares convergence)."""
+        raise NotImplementedError
+
+    def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
+        """Generic host driver: counts -> pairs -> select -> push."""
+        g = sess.graph
+        m = RunMetrics(
+            iterations_per_job=np.zeros(sess.capacity, dtype=np.int64))
+        pairs_fn = sess._pairs_fn()
+        counts_fn = sess._counts_fn()
+        values, deltas = sess.values, sess.deltas
+        for _ in range(max_supersteps):
+            counts = np.asarray(counts_fn(values, deltas))
+            active = counts > 0
+            m.iterations_per_job[active] += 1
+            if not active.any():
+                m.converged = True
+                break
+            node_un = p_mean = None
+            if self.needs_pairs:
+                node_un, p_mean = map(np.asarray, pairs_fn(values, deltas))
+            selection = self.select(sess, node_un, p_mean, active)
+            if selection is None:
+                m.converged = True
+                break
+            push_fn = (sess._push_shared_fn() if selection.shared
+                       else sess._push_indep_fn())
+            values, deltas = push_fn(values, deltas, g.tiles, g.nbr_ids,
+                                     jnp.asarray(selection.sel),
+                                     jnp.asarray(selection.msk),
+                                     sess.push_scale)
+            m.supersteps += 1
+            m.tile_loads += selection.tile_loads
+            m.job_block_pushes += selection.job_block_pushes
+        sess.values, sess.deltas = values, deltas
+        return m
+
+
+class TwoLevel(SchedulePolicy):
+    """The paper's schedule: MPDS (host DO + global queue) + CAJS push."""
+
+    name = "two_level"
+
+    def select(self, sess, node_un, p_mean, active):
+        gq = sess.scheduler.synthesize(
+            sess.scheduler.job_queues(node_un, p_mean, active))
+        if len(gq) == 0:
+            return None
+        q = sess.q
+        sel = np.zeros(q, dtype=np.int32)
+        msk = np.zeros(q, dtype=np.float32)
+        sel[:len(gq)] = gq[:q]
+        msk[:len(gq)] = 1.0
+        # CAJS: staged once, dispatched only to jobs unconverged on the block
+        return Selection(sel, msk, shared=True, tile_loads=int(len(gq)),
+                         job_block_pushes=int((node_un[:, gq] > 0).sum()))
+
+
+class Independent(SchedulePolicy):
+    """Per-job queues processed separately (paper Fig. 3 'current mode')."""
+
+    name = "independent"
+
+    def select(self, sess, node_un, p_mean, active):
+        q = sess.q
+        j_cap = node_un.shape[0]
+        sel = np.zeros((j_cap, q), dtype=np.int32)
+        msk = np.zeros((j_cap, q), dtype=np.float32)
+        loads = pushes = 0
+        for j, qj in enumerate(
+                sess.scheduler.job_queues(node_un, p_mean, active)):
+            if len(qj) == 0:
+                continue
+            sel[j, :len(qj)] = qj[:q]
+            msk[j, :len(qj)] = 1.0
+            loads += int(len(qj))          # each job stages its own
+            pushes += int(len(qj))
+        return Selection(sel, msk, shared=False, tile_loads=loads,
+                         job_block_pushes=pushes)
+
+
+class AllBlocks(SchedulePolicy):
+    """Non-prioritized synchronous baseline: all blocks, shared staging."""
+
+    name = "all_blocks"
+    needs_pairs = False
+
+    def select(self, sess, node_un, p_mean, active):
+        bn = sess.graph.num_blocks
+        sel = np.arange(bn, dtype=np.int32)
+        msk = np.ones(bn, dtype=np.float32)
+        return Selection(sel, msk, shared=True, tile_loads=bn,
+                         job_block_pushes=bn * int(active.sum()))
+
+
+class Fused(SchedulePolicy):
+    """Beyond-paper: entire two-level loop in one on-device while_loop.
+
+    Per-job push/iteration counters ride in the while_loop carry so
+    RunMetrics stays comparable with the host policies."""
+
+    name = "fused"
+    needs_pairs = False
+
+    def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
+        g = sess.graph
+        alg = sess.view_alg
+        q, alpha = sess.q, sess.alpha
+        push = sess._push_one
+        push_scale = sess.push_scale
+        n_res = max(0, q - int(math.ceil(alpha * q)))  # reserved head slots
+
+        def body(carry):
+            it, values, deltas, loads, pushes, iters = carry
+            node_un, p_mean = compute_pairs(alg, values, deltas)
+            score = prio.do_score(node_un, p_mean)          # [J, B_N]
+            topv, topi = jax.lax.top_k(score, q)            # per-job queues
+            valid = jnp.isfinite(topv)
+            w = jnp.arange(q, 0, -1, dtype=jnp.float32) * valid
+            gpri = jnp.zeros((g.num_blocks,), jnp.float32)
+            gpri = gpri.at[topi.reshape(-1)].add(w.reshape(-1))
+            # reserve: force per-job heads into the queue (device analogue of
+            # the paper's (1-alpha)q individual-head slots)
+            if n_res > 0:
+                heads = topi[:, 0]
+                head_valid = valid[:, 0]
+                gpri = gpri.at[heads].add(
+                    jnp.where(head_valid, 1e12, 0.0))
+            gv, gsel = jax.lax.top_k(gpri, q)
+            gmask = (gv > 0.0).astype(jnp.float32)
+            # metrics, same definitions as the host TwoLevel policy:
+            # a (job, block) processing event needs the block selected AND
+            # the job unconverged on it; a job iterates while any block is hot.
+            # float32 accumulator like `loads`: int32 would wrap on long runs
+            # (J*q per step), float32 only rounds past 2^24
+            pushes = pushes + jnp.sum(
+                ((node_un[:, gsel] > 0) & (gmask > 0)[None, :])
+                .astype(jnp.float32))
+            iters = iters + jnp.any(node_un > 0, axis=1).astype(jnp.int32)
+            values, deltas = jax.vmap(
+                push, in_axes=(0, 0, None, None, None, None, 0))(
+                values, deltas, g.tiles, g.nbr_ids,
+                gsel.astype(jnp.int32), gmask, push_scale)
+            return (it + 1, values, deltas, loads + jnp.sum(gmask),
+                    pushes, iters)
+
+        def cond(carry):
+            it, values, deltas, _, _, _ = carry
+            un = jnp.sum(alg.unconverged(values, deltas))
+            return (un > 0) & (it < max_supersteps)
+
+        it, values, deltas, loads, pushes, iters = jax.lax.while_loop(
+            cond, body,
+            (jnp.int32(0), sess.values, sess.deltas, jnp.float32(0),
+             jnp.float32(0), jnp.zeros(sess.capacity, jnp.int32)))
+        sess.values, sess.deltas = values, deltas
+        m = RunMetrics()
+        m.supersteps = int(it)
+        m.tile_loads = int(loads)
+        m.job_block_pushes = int(pushes)
+        m.converged = bool(int(it) < max_supersteps)
+        m.iterations_per_job = np.asarray(iters, dtype=np.int64)
+        return m
+
+
+POLICIES = {p.name: p for p in (TwoLevel, Fused, Independent, AllBlocks)}

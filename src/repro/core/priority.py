@@ -14,7 +14,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 EPS_FACTOR = 0.2  # paper: eps = 0.2 * P_mean_a

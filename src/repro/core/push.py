@@ -1,0 +1,80 @@
+"""Device-side push primitives for one job (vmapped over jobs above).
+
+A "push" processes the selected adjacency blocks for one job: it consumes
+the pending deltas of the selected blocks and scatters their contributions
+into the neighbours' deltas (paper Eq. 3, both semirings).  These are pure
+functions of stacked [B_N, Vb] state, shared by every schedule policy and
+by the pod-scale dry-run (repro.launch.graph_dryrun).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.base import Algorithm
+from repro.core import priority as prio
+
+
+def _block_mask(sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
+                num_blocks: int) -> jnp.ndarray:
+    """[q] ids + validity mask -> dense [B_N] bool, scatter-hazard free."""
+    m = jnp.zeros((num_blocks,), dtype=jnp.bool_)
+    return m.at[sel_ids].max(sel_mask > 0)
+
+
+def push_plus_one(values: jnp.ndarray, deltas: jnp.ndarray,
+                  tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
+                  sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
+                  push_scale: jnp.ndarray):
+    """One job, PLUS_TIMES semiring. values/deltas [B_N, Vb]."""
+    consumed = _block_mask(sel_ids, sel_mask, values.shape[0])[:, None]
+    raw = jnp.where(consumed, deltas, 0.0)
+    # mask padded selection slots: a padded slot aliases block 0 and must not
+    # re-push block 0's delta when block 0 is itself selected
+    d_sel = raw[sel_ids] * push_scale * sel_mask[:, None]  # [q, Vb]
+    t_sel = tiles[sel_ids]                                # [q, K, Vb, Vb]
+    contrib = jnp.einsum("qv,qkvw->qkw", d_sel, t_sel)    # [q, K, Vb]
+    values = values + raw
+    deltas = deltas - raw
+    dst = nbr_ids[sel_ids].reshape(-1)                    # [q*K]
+    deltas = deltas.at[dst].add(
+        contrib.reshape(-1, contrib.shape[-1]), mode="drop")
+    return values, deltas
+
+
+def push_min_one(values: jnp.ndarray, deltas: jnp.ndarray,
+                 tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
+                 sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
+                 push_scale: jnp.ndarray):
+    """One job, MIN_PLUS semiring (push_scale unused, kept for signature)."""
+    del push_scale
+    bn = values.shape[0]
+    consumed = _block_mask(sel_ids, sel_mask, bn)[:, None]
+    d_sel = jnp.where(consumed, deltas, jnp.inf)[sel_ids]   # [q, Vb]
+    d_sel = jnp.where(sel_mask[:, None] > 0, d_sel, jnp.inf)
+    deltas = jnp.where(consumed, jnp.inf, deltas)
+    t_sel = tiles[sel_ids]                                   # [q, K, Vb, Vb]
+    nbr_sel = nbr_ids[sel_ids]                               # [q, K]
+
+    def body(carry, inp):
+        values, deltas = carry
+        t_k, dst_k = inp                                     # [q,Vb,Vb], [q]
+        contrib = jnp.min(d_sel[:, :, None] + t_k, axis=1)   # [q, Vb]
+        old = values[dst_k]
+        values = values.at[dst_k].min(contrib)
+        new = values[dst_k]
+        improved = new < old
+        deltas = deltas.at[dst_k].min(jnp.where(improved, new, jnp.inf))
+        return (values, deltas), None
+
+    (values, deltas), _ = jax.lax.scan(
+        body, (values, deltas),
+        (jnp.swapaxes(t_sel, 0, 1), jnp.swapaxes(nbr_sel, 0, 1)))
+    return values, deltas
+
+
+def compute_pairs(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray):
+    """[J, B_N, Vb] -> (node_un [J,B_N], p_mean [J,B_N])."""
+    p = alg.vertex_priority(values, deltas)
+    return prio.block_pairs(p)

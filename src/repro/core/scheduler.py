@@ -1,0 +1,84 @@
+"""TwoLevelScheduler: the paper's scheduling core as a reusable object.
+
+Priority pairs -> per-job DO queues (Function 2) -> global-queue synthesis
+(Fig. 7).  The object is data-structure-agnostic on purpose: the graph
+engine feeds it <Node_un, P_mean> pairs per (job, vertex-block) and the LM
+serve scheduler feeds it pairs per (request-stream, request-group) — the
+"interlayer" design of the paper means the policy core is shared verbatim
+(DESIGN.md §4).
+
+The scheduler owns the sampling RNG so repeated `select` calls advance one
+reproducible stream; `reset()` restores the initial seed (the legacy
+`ConcurrentEngine` shim resets per run_* call to stay bit-identical with
+the historical per-call `default_rng(seed)` behaviour).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.do_select import do_select, DEFAULT_SAMPLES
+from repro.core.global_q import global_queue, DEFAULT_ALPHA
+
+PRITER_C = 100.0  # paper §5.1: q = C * B_N / sqrt(V_N), C = 100
+
+
+def optimal_queue_length(num_blocks: int, n_vertices: int,
+                         c: float = PRITER_C) -> int:
+    q = int(c * num_blocks / math.sqrt(max(n_vertices, 1)))
+    return max(1, min(q, num_blocks))
+
+
+class TwoLevelScheduler:
+    """Per-job DO queues + global-queue synthesis over `num_blocks` units."""
+
+    def __init__(self, num_blocks: int, q: int, *,
+                 alpha: float = DEFAULT_ALPHA,
+                 samples: int = DEFAULT_SAMPLES,
+                 seed: int = 0):
+        self.num_blocks = num_blocks
+        self.q = q
+        self.alpha = alpha
+        self.samples = samples
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Restore the RNG stream (optionally re-seeding)."""
+        if seed is not None:
+            self.seed = seed
+        self.rng = np.random.default_rng(self.seed)
+
+    # -- level 1: per-job DO queues (paper §4.2.2, Function 2) ---------------
+
+    def job_queues(self, node_un: np.ndarray, p_mean: np.ndarray,
+                   active: Optional[np.ndarray] = None,
+                   q: Optional[int] = None) -> List[np.ndarray]:
+        """[J, B_N] pairs -> per-job block queues, priority-descending.
+
+        `active` masks jobs whose queue should be empty without consuming
+        RNG draws (converged jobs / free session slots).
+        """
+        q = self.q if q is None else q
+        return [do_select(node_un[j], p_mean[j], q, self.rng, self.samples)
+                if active is None or active[j]
+                else np.empty(0, dtype=np.int64)
+                for j in range(node_un.shape[0])]
+
+    # -- level 2: global queue (paper §4.2.3, Fig. 7) ------------------------
+
+    def synthesize(self, queues: Sequence[np.ndarray],
+                   q: Optional[int] = None) -> np.ndarray:
+        q = self.q if q is None else q
+        return global_queue(queues, self.num_blocks, q, self.alpha)
+
+    def select(self, node_un: np.ndarray, p_mean: np.ndarray,
+               active: Optional[np.ndarray] = None,
+               q: Optional[int] = None
+               ) -> Tuple[List[np.ndarray], np.ndarray]:
+        """Both levels at once: (per-job queues, global queue)."""
+        queues = self.job_queues(node_un, p_mean, active, q)
+        return queues, self.synthesize(queues, q)

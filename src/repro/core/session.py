@@ -1,0 +1,321 @@
+"""GraphSession: a long-lived job-lifecycle API over one shared graph.
+
+The paper's premise is massive concurrent jobs ARRIVING AND LEAVING while
+sharing one graph (its §4.4 API has `initPtable` for a "newly-arrived
+job"), yet the historical engine API only ran a fixed job set to a joint
+fixpoint.  A GraphSession owns the shared BlockedGraph and exposes:
+
+  submit(alg) -> JobHandle     admit a job at ANY superstep
+  run(policy, max_supersteps)  advance all active jobs under a SchedulePolicy
+  step(policy)                 a single superstep
+  converged(handle)            per-job convergence test
+  result(handle)               per-job result extraction
+  detach(handle)               release the job's slot for reuse
+
+Internally the session maintains a PADDED [J_cap, B_N, Vb] job axis plus an
+active mask, so jitted push shapes stay stable across arrivals/departures:
+free slots hold the semiring's inert state (delta 0 / +inf), which makes
+them arithmetic no-ops in every policy — no re-tracing on submit/detach.
+Slots are recycled; handle generations catch stale use.  Capacity doubles
+(one re-trace) only when submissions exceed it.
+
+`run(..., mesh=...)` composes any policy with job-axis placement from
+repro.dist.graph (tiles replicated, job state sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.algorithms.base import Algorithm, PLUS_TIMES
+from repro.core.policy import RunMetrics, SchedulePolicy, TwoLevel
+from repro.core.push import compute_pairs, push_plus_one, push_min_one
+from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
+                                  PRITER_C)
+from repro.core.do_select import DEFAULT_SAMPLES
+from repro.core.global_q import DEFAULT_ALPHA
+from repro.graph.structure import CSRGraph, build_blocked
+
+
+@dataclasses.dataclass(frozen=True)
+class JobHandle:
+    """Ticket for a submitted job; stale after detach (generation check)."""
+
+    slot: int
+    gen: int
+    alg: Algorithm
+
+
+def _view_key(alg: Algorithm):
+    return (alg.semiring, alg.graph_fill, alg.graph_normalize,
+            alg.graph_symmetrize)
+
+
+class GraphSession:
+    """Owns one shared BlockedGraph + a padded, recyclable job axis."""
+
+    def __init__(self, csr: Optional[CSRGraph] = None, block_size: int = 64,
+                 *, capacity: int = 4, c: float = PRITER_C,
+                 alpha: float = DEFAULT_ALPHA, samples: int = DEFAULT_SAMPLES,
+                 seed: int = 0, use_pallas: bool = False):
+        self._csr = csr
+        self.block_size = block_size
+        self.capacity = max(1, int(capacity))
+        self.c = c
+        self._alpha = alpha
+        self._samples = samples
+        self._seed = seed
+        self.use_pallas = use_pallas
+        # populated on first submit (the graph view depends on the algorithm)
+        self.graph = None
+        self.view_alg: Optional[Algorithm] = None
+        self.scheduler: Optional[TwoLevelScheduler] = None
+        self.q = 0
+        self._push_one = None
+        self.values = self.deltas = self.push_scale = None
+        self.algs: List[Optional[Algorithm]] = [None] * self.capacity
+        self.active = np.zeros(self.capacity, dtype=bool)
+        self._gens = [0] * self.capacity
+        self._jit_cache = {}
+
+    # alpha/samples/seed live canonically on the scheduler once it exists
+    # (every policy must see one consistent value); before the first submit
+    # they are held locally
+
+    @property
+    def alpha(self) -> float:
+        return self.scheduler.alpha if self.scheduler else self._alpha
+
+    @alpha.setter
+    def alpha(self, value: float) -> None:
+        self._alpha = value
+        if self.scheduler:
+            self.scheduler.alpha = value
+
+    @property
+    def samples(self) -> int:
+        return self.scheduler.samples if self.scheduler else self._samples
+
+    @samples.setter
+    def samples(self, value: int) -> None:
+        self._samples = value
+        if self.scheduler:
+            self.scheduler.samples = value
+
+    @property
+    def seed(self) -> int:
+        return self.scheduler.seed if self.scheduler else self._seed
+
+    @seed.setter
+    def seed(self, value: int) -> None:
+        self._seed = value
+        if self.scheduler:
+            self.scheduler.reset(value)  # re-seeds AND restarts the stream
+
+    # -- construction from a legacy ConcurrentRun ---------------------------
+
+    @classmethod
+    def from_run(cls, run, *, c: float = PRITER_C,
+                 alpha: float = DEFAULT_ALPHA,
+                 samples: int = DEFAULT_SAMPLES, seed: int = 0,
+                 use_pallas: bool = False) -> "GraphSession":
+        """Adopt a pre-built ConcurrentRun: capacity == J, no padding, so
+        the legacy engine shim stays bit-identical to the historical API."""
+        sess = cls(None, run.graph.block_size, capacity=run.num_jobs,
+                   c=c, alpha=alpha, samples=samples, seed=seed,
+                   use_pallas=use_pallas)
+        sess._install_graph(run.graph, run.algs[0])
+        sess.values = run.values
+        sess.deltas = run.deltas
+        sess.push_scale = run.push_scale
+        sess.algs = list(run.algs)
+        sess.active[:] = True
+        return sess
+
+    # -- graph / state initialisation ---------------------------------------
+
+    def _install_graph(self, g, view_alg: Algorithm) -> None:
+        self.graph = g
+        self.view_alg = view_alg
+        self.q = optimal_queue_length(g.num_blocks, g.n_real, self.c)
+        self.scheduler = TwoLevelScheduler(
+            g.num_blocks, self.q, alpha=self.alpha, samples=self.samples,
+            seed=self.seed)
+        self._push_one = (push_plus_one
+                          if view_alg.semiring == PLUS_TIMES
+                          else push_min_one)
+
+    def _inert_state(self, n: int):
+        """State for free slots: converged-everywhere, pushes are no-ops."""
+        g = self.graph
+        fill = 0.0 if self.view_alg.semiring == PLUS_TIMES else jnp.inf
+        shape = (n, g.num_blocks, g.block_size)
+        return (jnp.full(shape, fill, dtype=jnp.float32),
+                jnp.full(shape, fill, dtype=jnp.float32))
+
+    def _ensure_graph(self, alg: Algorithm) -> None:
+        if self.graph is not None:
+            if _view_key(alg) != _view_key(self.view_alg):
+                raise ValueError(
+                    "concurrent jobs must share one graph view: "
+                    f"{_view_key(alg)} != {_view_key(self.view_alg)}")
+            return
+        if self._csr is None:
+            raise ValueError("GraphSession needs a CSRGraph to build from")
+        g_csr = (self._csr.symmetrized() if alg.graph_symmetrize
+                 else self._csr)
+        g = build_blocked(g_csr, self.block_size, fill=alg.graph_fill,
+                          normalize=alg.graph_normalize)
+        self._install_graph(g, alg)
+        self.values, self.deltas = self._inert_state(self.capacity)
+        self.push_scale = jnp.ones(self.capacity, dtype=jnp.float32)
+
+    def _grow(self) -> None:
+        extra = self.capacity
+        iv, idl = self._inert_state(extra)
+        self.values = jnp.concatenate([self.values, iv])
+        self.deltas = jnp.concatenate([self.deltas, idl])
+        self.push_scale = jnp.concatenate(
+            [self.push_scale, jnp.ones(extra, dtype=jnp.float32)])
+        self.algs.extend([None] * extra)
+        self._gens.extend([0] * extra)
+        self.active = np.concatenate(
+            [self.active, np.zeros(extra, dtype=bool)])
+        self.capacity += extra
+
+    # -- job lifecycle -------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    def submit(self, alg: Algorithm) -> JobHandle:
+        """Admit a job at any superstep; recycles a free slot or grows."""
+        self._ensure_graph(alg)
+        free = np.nonzero(~self.active)[0]
+        if len(free) == 0:
+            self._grow()
+            free = np.nonzero(~self.active)[0]
+        slot = int(free[0])
+        v, d = alg.init(self.graph)
+        self.values = self.values.at[slot].set(v)
+        self.deltas = self.deltas.at[slot].set(d)
+        self.push_scale = self.push_scale.at[slot].set(alg.get_push_scale())
+        self.algs[slot] = alg
+        self.active[slot] = True
+        return JobHandle(slot=slot, gen=self._gens[slot], alg=alg)
+
+    def _check(self, handle: JobHandle) -> None:
+        if not (0 <= handle.slot < self.capacity) \
+                or self._gens[handle.slot] != handle.gen \
+                or not self.active[handle.slot]:
+            raise KeyError(f"stale or unknown job handle {handle}")
+
+    def unconverged_counts(self) -> np.ndarray:
+        """[J_cap] unconverged-vertex count per slot (0 for free slots) —
+        one device reduction; index by handle.slot to poll many handles."""
+        return np.asarray(self._counts_fn()(self.values, self.deltas))
+
+    def converged(self, handle: JobHandle) -> bool:
+        self._check(handle)
+        return bool(self.unconverged_counts()[handle.slot] == 0)
+
+    def result(self, handle: JobHandle) -> np.ndarray:
+        """[n_real] result for one job (valid at any superstep)."""
+        self._check(handle)
+        res = handle.alg.result(self.values[handle.slot],
+                                self.deltas[handle.slot])
+        return np.asarray(res).reshape(-1)[:self.graph.n_real]
+
+    def detach(self, handle: JobHandle) -> np.ndarray:
+        """Extract the job's result and free its slot for reuse."""
+        res = self.result(handle)
+        slot = handle.slot
+        iv, idl = self._inert_state(1)
+        self.values = self.values.at[slot].set(iv[0])
+        self.deltas = self.deltas.at[slot].set(idl[0])
+        self.push_scale = self.push_scale.at[slot].set(1.0)
+        self.algs[slot] = None
+        self.active[slot] = False
+        self._gens[slot] += 1
+        return res
+
+    # -- jitted primitives (shared by every policy) --------------------------
+
+    def _pairs_fn(self):
+        key = "pairs"
+        if key not in self._jit_cache:
+            alg = self.view_alg
+            self._jit_cache[key] = jax.jit(
+                lambda v, d: compute_pairs(alg, v, d))
+        return self._jit_cache[key]
+
+    def _counts_fn(self):
+        key = "counts"
+        if key not in self._jit_cache:
+            alg = self.view_alg
+            self._jit_cache[key] = jax.jit(
+                lambda v, d: jnp.sum(alg.unconverged(v, d), axis=(1, 2)))
+        return self._jit_cache[key]
+
+    def _push_shared_fn(self):
+        """All jobs process the same selected blocks (CAJS)."""
+        key = ("push_shared", self.use_pallas)
+        if key not in self._jit_cache:
+            if self.use_pallas:
+                from repro.kernels.mj_spmm import ops as mj_ops
+                fn = partial(mj_ops.push_shared,
+                             semiring=self.view_alg.semiring)
+                self._jit_cache[key] = jax.jit(
+                    lambda v, d, t, n, si, sm, ps: fn(v, d, t, n, si, sm, ps))
+            else:
+                push = self._push_one
+                self._jit_cache[key] = jax.jit(jax.vmap(
+                    push, in_axes=(0, 0, None, None, None, None, 0)))
+        return self._jit_cache[key]
+
+    def _push_indep_fn(self):
+        """Each job processes its own selection (redundancy baseline)."""
+        key = "push_indep"
+        if key not in self._jit_cache:
+            push = self._push_one
+            self._jit_cache[key] = jax.jit(jax.vmap(
+                push, in_axes=(0, 0, None, None, 0, 0, 0)))
+        return self._jit_cache[key]
+
+    # -- placement -----------------------------------------------------------
+
+    def _place(self, mesh) -> None:
+        """Shard the job axis over `mesh` (repro.dist.graph): tiles
+        replicated per device, values/deltas job-sharded.  Scheduling is
+        unchanged — SPMD partitions the vmapped pushes along the job axis,
+        so per-job arithmetic (and the fixpoint) is identical."""
+        if mesh is None:
+            return
+        from repro.dist.graph import shard_job_state
+        self.values, self.deltas, self.push_scale = shard_job_state(
+            mesh, self.values, self.deltas, self.push_scale, self.graph)
+
+    # -- driving -------------------------------------------------------------
+
+    def run(self, policy: Optional[SchedulePolicy] = None,
+            max_supersteps: int = 100000, *, mesh=None) -> RunMetrics:
+        """Advance all active jobs until they converge (or the budget ends).
+
+        Jobs submitted after this returns resume from the shared state:
+        call run() again to drive the new mix — that is the arrival model."""
+        if self.graph is None:
+            raise ValueError("no jobs submitted yet")
+        policy = TwoLevel() if policy is None else policy
+        self._place(mesh)
+        return policy.run(self, max_supersteps)
+
+    def step(self, policy: Optional[SchedulePolicy] = None) -> RunMetrics:
+        """A single superstep under `policy`."""
+        return self.run(policy, max_supersteps=1)

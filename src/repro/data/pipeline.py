@@ -9,13 +9,11 @@ Prefetcher         - background-thread host->device prefetch (overlap input
 
 from __future__ import annotations
 
-import os
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Optional
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 

@@ -51,26 +51,35 @@ def _replicated(mesh: Mesh, x) -> jax.Array:
     return jax.device_put(x, NamedSharding(mesh, P(*([None] * x.ndim))))
 
 
-def shard_run(run, mesh: Mesh, axis_name: Optional[str] = None):
-    """Place a ConcurrentRun on `mesh`: job state sharded over the job axis,
-    graph replicated.  Returns a new ConcurrentRun (graph mutated in place —
-    it is the shared view by design)."""
+def shard_job_state(mesh: Mesh, values, deltas, push_scale, graph,
+                    axis_name: Optional[str] = None):
+    """Place stacked job state on `mesh`: values/deltas/push_scale sharded
+    over the job axis, the shared graph replicated (mutated in place — it is
+    the shared view by design).  Used by GraphSession and shard_run alike;
+    a session's padded [J_cap, ...] axis shards exactly like a fixed [J, ...]
+    one because free slots are inert."""
     axis = axis_name or mesh.axis_names[0]
     n_shard = mesh.shape[axis]
-    j = run.values.shape[0]
+    j = values.shape[0]
     if j % n_shard == 0:
         jobs3 = job_sharding(mesh, axis, ndim=3)
         jobs1 = job_sharding(mesh, axis, ndim=1)
     else:  # remainder jobs: replicate rather than pad (identical math)
         jobs3 = NamedSharding(mesh, P(None, None, None))
         jobs1 = NamedSharding(mesh, P(None))
-    g = run.graph
-    g.tiles = _replicated(mesh, g.tiles)
-    g.nbr_ids = _replicated(mesh, g.nbr_ids)
-    g.nbr_mask = _replicated(mesh, g.nbr_mask)
-    g.vertex_mask = _replicated(mesh, g.vertex_mask)
+    graph.tiles = _replicated(mesh, graph.tiles)
+    graph.nbr_ids = _replicated(mesh, graph.nbr_ids)
+    graph.nbr_mask = _replicated(mesh, graph.nbr_mask)
+    graph.vertex_mask = _replicated(mesh, graph.vertex_mask)
+    return (jax.device_put(values, jobs3),
+            jax.device_put(deltas, jobs3),
+            jax.device_put(push_scale, jobs1))
+
+
+def shard_run(run, mesh: Mesh, axis_name: Optional[str] = None):
+    """Place a ConcurrentRun on `mesh`: job state sharded over the job axis,
+    graph replicated.  Returns a new ConcurrentRun."""
+    values, deltas, push_scale = shard_job_state(
+        mesh, run.values, run.deltas, run.push_scale, run.graph, axis_name)
     return dataclasses.replace(
-        run,
-        values=jax.device_put(run.values, jobs3),
-        deltas=jax.device_put(run.deltas, jobs3),
-        push_scale=jax.device_put(run.push_scale, jobs1))
+        run, values=values, deltas=deltas, push_scale=push_scale)

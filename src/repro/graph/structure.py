@@ -115,7 +115,6 @@ def build_blocked(csr: CSRGraph, block_size: int, *,
     n = csr.n
     vb = block_size
     bn = -(-n // vb)  # ceil
-    n_pad = bn * vb
 
     src = np.repeat(np.arange(n, dtype=np.int64), csr.out_degree)
     dst = csr.indices.astype(np.int64)

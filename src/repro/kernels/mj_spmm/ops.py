@@ -53,7 +53,6 @@ def push_shared(values: jnp.ndarray, deltas: jnp.ndarray,
                 interpret: bool | None = None):
     """Kernel-backed CAJS push. values/deltas [J, B_N, Vb]; returns updated."""
     j, bn, vb = values.shape
-    q = sel_ids.shape[0]
     consumed = jnp.zeros((bn,), jnp.bool_).at[sel_ids].max(sel_mask > 0)
     consumed = consumed[None, :, None]
     t_sel = tiles[sel_ids]                       # [q, K, Vb, Vb]

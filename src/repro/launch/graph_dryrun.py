@@ -14,7 +14,6 @@ the paper's cache argument becomes an ICI sparsifier (DESIGN.md §2).
 
 import argparse
 import json
-import math
 import time
 
 import jax

@@ -18,12 +18,10 @@ import numpy as np
 
 from repro import configs
 from repro.models import LM
-from repro.models.config import ShapeConfig
 from repro.data.pipeline import SyntheticTokens, Prefetcher
 from repro.dist.act import activation_sharding
 from repro.dist.fault import RestartManager
-from repro.dist.sharding import (ShardingRules, param_shardings,
-                                 batch_shardings)
+from repro.dist.sharding import ShardingRules, param_shardings
 from repro.launch.mesh import make_host_mesh
 from repro.train.optimizer import AdamWConfig, adamw_init
 from repro.train.train_step import make_train_step

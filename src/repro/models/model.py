@@ -7,8 +7,7 @@ plus an unrolled remainder.  One code path serves train (no cache), prefill
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -397,7 +396,6 @@ class LM:
 
     def forward_train(self, params, tokens, patch_embeds=None):
         """Full forward, no cache. Returns (logits, aux_loss)."""
-        cfg = self.cfg
         x = self._embed(params, tokens, patch_embeds)
         b, s = x.shape[0], x.shape[1]
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))

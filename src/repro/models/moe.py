@@ -7,7 +7,6 @@ scatter/gather einsums XLA partitions into all-to-all traffic.
 
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

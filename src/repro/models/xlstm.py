@@ -182,7 +182,8 @@ def init_slstm_cache(cfg, batch: int, dtype) -> dict:
     d = cfg.d_model
     h = cfg.n_heads
     dh = d // h
-    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    def z():
+        return jnp.zeros((batch, h, dh), jnp.float32)
     return {"c": z(), "n": z(), "h": z(),
             "m": jnp.zeros((batch, h), jnp.float32)}
 

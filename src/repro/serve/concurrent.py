@@ -9,20 +9,24 @@ Mapping:
                        (continuous batching: weights are the shared data)
   MPDS/global queue<-> admission: per-stream DO queues -> De_Gl_Priority
 
-The scheduler reuses repro.core's CBP comparator, Function-2 selection and
-global-queue synthesis unchanged — the point of the paper's "interlayer"
-design is exactly that the policy is data-structure-agnostic.
+The scheduler runs on the SAME TwoLevelScheduler object as the graph
+engine (repro.core.scheduler) — the point of the paper's "interlayer"
+design is exactly that the policy core is data-structure-agnostic.
+
+Admission is deterministic (streams visited in sorted id order, not dict
+insertion order) and linear in the number of waiting requests (per-group
+FIFO cursors instead of repeated list scans/removals).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Dict, List
 
 import numpy as np
 
-from repro.core.do_select import do_select
-from repro.core.global_q import global_queue
+from repro.core.scheduler import TwoLevelScheduler
 
 
 @dataclasses.dataclass
@@ -51,9 +55,20 @@ class ConcurrentServeScheduler:
                  alpha: float = 0.8, seed: int = 0):
         self.n_groups = n_groups
         self.batch_budget = batch_budget
-        self.alpha = alpha
-        self.rng = np.random.default_rng(seed)
+        self.scheduler = TwoLevelScheduler(
+            n_groups, max(1, batch_budget // 4), alpha=alpha, seed=seed)
         self.streams: Dict[int, RequestStream] = {}
+
+    # batch_budget is mutable between steps (schedule_step recomputes q from
+    # it); alpha lives canonically on the scheduler, delegated for the same
+    # mutability
+    @property
+    def alpha(self) -> float:
+        return self.scheduler.alpha
+
+    @alpha.setter
+    def alpha(self, value: float) -> None:
+        self.scheduler.alpha = value
 
     def add_stream(self, stream: RequestStream):
         self.streams[stream.stream_id] = stream
@@ -71,30 +86,57 @@ class ConcurrentServeScheduler:
     def schedule_step(self) -> List[Request]:
         """Pick request groups via the two-level policy, then admit requests
         from selected groups (all streams share them — CAJS) up to budget."""
-        q = max(1, self.batch_budget // 4)
-        queues = []
-        for stream in self.streams.values():
-            n_un, p_mean = self._pairs(stream)
-            queues.append(do_select(n_un, p_mean, q, self.rng))
-        gq = global_queue(queues, self.n_groups, q, self.alpha)
+        streams = [self.streams[sid] for sid in sorted(self.streams)]
+        node_un = np.zeros((len(streams), self.n_groups))
+        p_mean = np.zeros((len(streams), self.n_groups))
+        for i, stream in enumerate(streams):
+            node_un[i], p_mean[i] = self._pairs(stream)
+        _, gq = self.scheduler.select(node_un, p_mean,
+                                      q=max(1, self.batch_budget // 4))
 
+        # one pass builds per-(stream, group) FIFO cursors; admission below
+        # is O(total waiting), no list.remove scans
+        buckets = [dict() for _ in streams]
+        for si, stream in enumerate(streams):
+            for i, r in enumerate(stream.waiting):
+                buckets[si].setdefault(r.group, deque()).append(i)
+        taken = [set() for _ in streams]
         admitted: List[Request] = []
+
+        def admit(si: int, i: int) -> bool:
+            """Admit waiting[i] unless the budget is already spent; returns
+            True once the batch is full (a full batch never admits)."""
+            if len(admitted) >= self.batch_budget:
+                return True
+            admitted.append(streams[si].waiting[i])
+            taken[si].add(i)
+            return len(admitted) >= self.batch_budget
+
+        full = False
         # round-robin across streams within selected groups (fair sharing)
         for g in gq:
-            for stream in self.streams.values():
-                if len(admitted) >= self.batch_budget:
-                    return admitted
-                for r in list(stream.waiting):
-                    if r.group == int(g):
-                        admitted.append(r)
-                        stream.waiting.remove(r)
-                        break
+            if full:
+                break
+            for si in range(len(streams)):
+                fifo = buckets[si].get(int(g))
+                if not fifo:
+                    continue
+                full = admit(si, fifo.popleft())
+                if full:
+                    break
         # fill remaining budget from any group (paper: finished jobs keep
         # computing low-priority blocks instead of idling)
-        for stream in self.streams.values():
-            for r in list(stream.waiting):
-                if len(admitted) >= self.batch_budget:
-                    return admitted
-                admitted.append(r)
-                stream.waiting.remove(r)
+        for si, stream in enumerate(streams):
+            if full:
+                break
+            for i in range(len(stream.waiting)):
+                if i in taken[si]:
+                    continue
+                full = admit(si, i)
+                if full:
+                    break
+        for si, stream in enumerate(streams):
+            if taken[si]:
+                stream.waiting = [r for i, r in enumerate(stream.waiting)
+                                  if i not in taken[si]]
         return admitted

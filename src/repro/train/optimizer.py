@@ -60,7 +60,8 @@ def schedule_fn(cfg: AdamWConfig) -> Callable:
 
 
 def adamw_init(params):
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "mu": jax.tree.map(zeros32, params),
         "nu": jax.tree.map(zeros32, params),

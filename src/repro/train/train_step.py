@@ -4,8 +4,7 @@ repro.dist.compression)."""
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -93,3 +93,46 @@ def test_schedule_step_duplicate_hot_group_across_streams():
     assert len(admitted) == 2
     assert {r.stream_id for r in admitted} == {1, 2}
     assert all(r.group == 5 for r in admitted)
+
+
+def _populated_scheduler(stream_order):
+    sched = ConcurrentServeScheduler(n_groups=6, batch_budget=5, seed=0)
+    streams = {sid: RequestStream(sid) for sid in (1, 2, 3)}
+    for sid in stream_order:
+        sched.add_stream(streams[sid])
+    for sid, s in streams.items():
+        for i in range(4):
+            s.add(Request(sid, (sid + i) % 6, urgency=float(sid + i),
+                          tokens_left=5))
+    return sched
+
+
+def test_schedule_step_independent_of_stream_insertion_order():
+    """Admission was dict-insertion-order dependent; it must now depend only
+    on sorted stream ids (same RNG stream, same request set -> same batch)."""
+    a = _populated_scheduler([1, 2, 3]).schedule_step()
+    b = _populated_scheduler([3, 1, 2]).schedule_step()
+    key = [(r.stream_id, r.group, r.urgency) for r in a]
+    assert key == [(r.stream_id, r.group, r.urgency) for r in b]
+    assert len(a) == 5
+
+
+def test_schedule_step_zero_budget_admits_nothing():
+    sched = ConcurrentServeScheduler(n_groups=4, batch_budget=0, seed=0)
+    s = RequestStream(1)
+    sched.add_stream(s)
+    s.add(Request(1, 0, urgency=1.0, tokens_left=5))
+    assert sched.schedule_step() == []
+    assert len(s.waiting) == 1
+
+
+def test_schedule_step_drains_fifo_within_a_group():
+    """Linear index-based drain must keep per-(stream, group) FIFO order."""
+    sched = ConcurrentServeScheduler(n_groups=2, batch_budget=4, seed=0)
+    s = RequestStream(1)
+    sched.add_stream(s)
+    for urg in (1.0, 2.0, 3.0):
+        s.add(Request(1, 0, urgency=urg, tokens_left=5))
+    admitted = sched.schedule_step()
+    assert [r.urgency for r in admitted] == [1.0, 2.0, 3.0]
+    assert s.waiting == []

@@ -1,7 +1,6 @@
 """HLO analysis unit tests: loop trip parsing, collective wire accounting,
 dot-FLOP counting (validated against a known matmul-in-scan program)."""
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest

@@ -1,0 +1,195 @@
+"""GraphSession lifecycle: dynamic submit/detach over one shared graph.
+
+Covers the api_redesign acceptance criteria:
+  * a job submitted MID-RUN converges to the same result (allclose) as the
+    same algorithm run in a static batch, under TwoLevel and Fused, with
+    and without a jobs mesh (mesh variant in a 4-host-device subprocess);
+  * detaching a converged job frees its slot and later submissions reuse
+    it (stale handles are rejected);
+  * the legacy ConcurrentEngine shim stays bit-identical to a direct
+    GraphSession drive (the existing convergence suite pins the shim's
+    fixpoints themselves).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.algorithms import PageRank, PersonalizedPageRank, SSSP
+from repro.core import (AllBlocks, ConcurrentEngine, Fused, GraphSession,
+                        Independent, TwoLevel, make_run)
+from repro.graph import rmat_graph, uniform_graph
+
+CSR = rmat_graph(300, 5, seed=7)
+CSR_W = uniform_graph(200, 5, seed=8, weighted=True, w_max=9.0)
+
+
+def _static_reference(algs, csr, block_size, seed):
+    eng = ConcurrentEngine(make_run(algs, csr, block_size), seed=seed)
+    assert eng.run_two_level(20000).converged
+    return eng.results()
+
+
+@pytest.mark.parametrize("policy", [TwoLevel(), Fused()],
+                         ids=["two_level", "fused"])
+def test_mid_run_submit_matches_static_batch(policy):
+    algs = [PageRank(), PersonalizedPageRank(source=7)]
+    sess = GraphSession(CSR, 32, capacity=2, seed=5)
+    h0 = sess.submit(algs[0])
+    sess.run(policy, max_supersteps=5)          # job 1 arrives mid-run
+    h1 = sess.submit(algs[1])
+    assert sess.run(policy, max_supersteps=20000).converged
+    ref = _static_reference(algs, CSR, 32, seed=5)
+    np.testing.assert_allclose(sess.result(h0), ref[0], rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(sess.result(h1), ref[1], rtol=1e-3, atol=1e-5)
+
+
+def test_mid_run_submit_min_plus_exact():
+    """MIN_PLUS fixpoints are schedule-invariant, so arrival order must not
+    change a single distance."""
+    sess = GraphSession(CSR_W, 32, capacity=2, seed=3)
+    h0 = sess.submit(SSSP(source=0))
+    sess.run(TwoLevel(), max_supersteps=3)
+    h1 = sess.submit(SSSP(source=17))
+    assert sess.run(TwoLevel(), max_supersteps=20000).converged
+    ref = _static_reference([SSSP(source=0), SSSP(source=17)], CSR_W, 32,
+                            seed=3)
+    np.testing.assert_array_equal(sess.result(h0), ref[0])
+    np.testing.assert_array_equal(sess.result(h1), ref[1])
+
+
+def test_session_static_batch_is_bitwise_equal_to_engine_shim():
+    algs = [PageRank(damping=0.85), PageRank(damping=0.7)]
+    eng = ConcurrentEngine(make_run(algs, CSR, 32), seed=11)
+    m_e = eng.run_two_level(20000)
+    sess = GraphSession(CSR, 32, capacity=2, seed=11)
+    handles = [sess.submit(a) for a in algs]
+    m_s = sess.run(TwoLevel(), 20000)
+    assert m_e.converged and m_s.converged
+    assert m_e.supersteps == m_s.supersteps
+    assert m_e.tile_loads == m_s.tile_loads
+    assert m_e.job_block_pushes == m_s.job_block_pushes
+    np.testing.assert_array_equal(
+        eng.results(), np.stack([sess.result(h) for h in handles]))
+
+
+def test_detach_frees_slot_and_recycles_it():
+    sess = GraphSession(CSR, 32, capacity=2, seed=0)
+    h0 = sess.submit(PageRank())
+    h1 = sess.submit(PersonalizedPageRank(source=3))
+    assert sess.run(TwoLevel(), 20000).converged
+    assert sess.converged(h0) and sess.converged(h1)
+    res0 = sess.detach(h0)                      # frees slot 0
+    assert res0.shape == (CSR.n,)
+    assert sess.num_active == 1
+    h2 = sess.submit(PageRank(damping=0.6))     # reuses the freed slot
+    assert h2.slot == h0.slot
+    with pytest.raises(KeyError):
+        sess.result(h0)                         # stale handle
+    with pytest.raises(KeyError):
+        sess.detach(h0)
+    assert sess.run(TwoLevel(), 20000).converged
+    ref = _static_reference([PageRank(damping=0.6)], CSR, 32, seed=0)
+    np.testing.assert_allclose(sess.result(h2), ref[0], rtol=1e-3, atol=1e-5)
+    # the already-converged survivor is untouched by the newcomer's run
+    np.testing.assert_allclose(
+        sess.result(h1),
+        _static_reference([PersonalizedPageRank(source=3)], CSR, 32, seed=0)[0],
+        rtol=1e-3, atol=1e-5)
+
+
+def test_capacity_growth_preserves_running_jobs():
+    sess = GraphSession(CSR, 32, capacity=1, seed=2)
+    h0 = sess.submit(PageRank())
+    sess.run(TwoLevel(), 4)
+    h1 = sess.submit(PersonalizedPageRank(source=50))   # doubles capacity
+    assert sess.capacity == 2
+    h2 = sess.submit(PersonalizedPageRank(source=120))  # doubles again
+    assert sess.capacity == 4
+    assert sess.run(TwoLevel(), 20000).converged
+    algs = [PageRank(), PersonalizedPageRank(source=50),
+            PersonalizedPageRank(source=120)]
+    ref = _static_reference(algs, CSR, 32, seed=2)
+    for h, r in zip((h0, h1, h2), ref):
+        np.testing.assert_allclose(sess.result(h), r, rtol=1e-3, atol=1e-5)
+
+
+def test_mixed_view_submission_rejected():
+    sess = GraphSession(CSR_W, 32, seed=0)
+    sess.submit(SSSP(source=0))
+    with pytest.raises(ValueError):
+        sess.submit(PageRank())                 # different graph view
+
+
+@pytest.mark.parametrize("policy", [Independent(), AllBlocks()],
+                         ids=["independent", "all_blocks"])
+def test_baseline_policies_reach_the_same_fixpoint(policy):
+    algs = [PageRank(), PersonalizedPageRank(source=7)]
+    sess = GraphSession(CSR, 32, capacity=2, seed=9)
+    handles = [sess.submit(a) for a in algs]
+    assert sess.run(policy, 20000).converged
+    ref = _static_reference(algs, CSR, 32, seed=9)
+    for h, r in zip(handles, ref):
+        np.testing.assert_allclose(sess.result(h), r, rtol=1e-3, atol=1e-5)
+
+
+def test_fused_metrics_are_populated_and_comparable():
+    """Satellite: run_fused used to leave job_block_pushes at 0."""
+    algs = [PageRank(damping=d) for d in (0.85, 0.7)]
+    m_f = ConcurrentEngine(make_run(algs, CSR, 32), seed=11).run_fused(20000)
+    m_h = ConcurrentEngine(make_run(algs, CSR, 32),
+                           seed=11).run_two_level(20000)
+    assert m_f.converged and m_h.converged
+    assert m_f.job_block_pushes > 0
+    # same definition of a (job, block) processing event as the host driver
+    assert m_f.job_block_pushes <= m_f.supersteps * len(algs) * 1000
+    # per-job iteration counts reflect that the 0.7-damping job finishes first
+    assert m_f.iterations_per_job[1] < m_f.iterations_per_job[0]
+
+
+SESSION_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import PageRank, PersonalizedPageRank
+from repro.core import ConcurrentEngine, GraphSession, TwoLevel, Fused, make_run
+from repro.dist.graph import make_job_mesh
+from repro.graph import rmat_graph
+
+assert len(jax.devices()) == 4
+csr = rmat_graph(200, 5, seed=13)
+algs = [PageRank(), PageRank(damping=0.7),
+        PersonalizedPageRank(source=11), PersonalizedPageRank(source=42)]
+ref_eng = ConcurrentEngine(make_run(algs, csr, 16), seed=5)
+assert ref_eng.run_two_level(20000).converged
+ref = ref_eng.results()
+
+for policy, tag in ((TwoLevel(), "TWO-LEVEL"), (Fused(), "FUSED")):
+    mesh = make_job_mesh(4)
+    sess = GraphSession(csr, 16, capacity=4, seed=5)
+    h = [sess.submit(a) for a in algs[:2]]
+    sess.run(policy, max_supersteps=4, mesh=mesh)   # arrivals mid-run
+    h += [sess.submit(a) for a in algs[2:]]
+    m = sess.run(policy, 20000, mesh=mesh)
+    assert m.converged
+    assert sess.values.sharding.spec[0] == "jobs", sess.values.sharding
+    got = np.stack([sess.result(hh) for hh in h])
+    np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-5)
+    print(tag + "-MESH-SESSION-OK")
+"""
+
+
+def test_session_mesh_mid_run_submit_matches_static():
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    pythonpath = src + os.pathsep + os.environ.get("PYTHONPATH", "")
+    result = subprocess.run(
+        [sys.executable, "-c", SESSION_MESH_SCRIPT],
+        capture_output=True, text=True, timeout=480,
+        env={**os.environ, "PYTHONPATH": pythonpath.rstrip(os.pathsep)})
+    for marker in ("TWO-LEVEL-MESH-SESSION-OK", "FUSED-MESH-SESSION-OK"):
+        assert marker in result.stdout, result.stderr[-2000:]

@@ -1,15 +1,13 @@
 """Substrate tests: optimizer, checkpoint/elastic-restore, restart manager,
 gradient compression, data pipeline, concurrent serve scheduler."""
 
-import os
-
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
-                                   wsd_schedule, cosine_schedule)
+                                   wsd_schedule)
 from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
                                     latest_step, AsyncCheckpointer)
 from repro.dist.fault import RestartManager, StragglerWatchdog
