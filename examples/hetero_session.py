@@ -1,0 +1,77 @@
+"""Heterogeneous sessions: mixed-semiring jobs sharing one staged tile.
+
+The paper's CAJS promise is that ARBITRARY concurrent jobs touching the
+same graph data are served by one cache staging.  A GraphSession now keeps
+a registry of graph views — one per `(semiring, fill, normalize,
+symmetrize)` key, each built lazily from the shared CSR and block-aligned,
+so block id b names the same vertex range in every view.  One scheduling
+decision per superstep then stages each selected block ONCE and dispatches
+it through the plus-times push (PageRank/Katz) AND the min-plus push
+(SSSP/BFS) for whichever jobs are unconverged on it:
+
+  * `RunMetrics.tile_loads` counts that shared staging once, so the
+    cross-family saving is measurable — compare against running the two
+    families in separate sessions;
+  * every job still reaches its solo-session fixpoint (exactly for
+    min-plus, within tolerance for plus-times);
+  * works under every policy (`TwoLevel`, `Fused`, `Independent`,
+    `AllBlocks`) and composes with `mesh=` job-axis sharding per view.
+
+  PYTHONPATH=src python examples/hetero_session.py
+"""
+
+import numpy as np
+
+from repro.algorithms import BFS, Katz, PageRank, SSSP
+from repro.core import GraphSession, TwoLevel
+from repro.graph import uniform_graph
+
+
+def main():
+    # uniform degree keeps Katz contractive (alpha * rho(A) < 1)
+    csr = uniform_graph(1200, 8, seed=0)
+    print(f"shared CSR: {csr.n} vertices, {csr.nnz} edges")
+
+    # one heterogeneous session absorbs a mixed arrival stream
+    sess = GraphSession(csr, block_size=64, capacity=4, seed=0)
+    policy = TwoLevel()
+    arrivals = [PageRank(), SSSP(source=0), Katz(alpha=0.02),
+                BFS(source=77), SSSP(source=501)]
+    handles, hetero_loads = [], 0
+    for alg in arrivals:
+        handles.append(sess.submit(alg))
+        print(f"submit {alg.name:8s} -> view {len(sess.groups)} views, "
+              f"{sess.num_active} active jobs")
+        hetero_loads += sess.run(policy, max_supersteps=10).tile_loads
+    m = sess.run(policy)
+    assert m.converged
+    hetero_loads += m.tile_loads
+
+    dist = sess.result(handles[1])                    # the SSSP job
+    rank = sess.result(handles[0])                    # the PageRank job
+    print(f"SSSP reaches {int(np.isfinite(dist).sum())}/{csr.n} vertices; "
+          f"PageRank mass {rank.sum():.1f}")
+
+    # same arrival schedule, one session per semiring family (created on
+    # its family's first arrival; both live through every global gap)
+    split_loads = 0
+    sessions = {}
+    for alg in arrivals:
+        if alg.semiring not in sessions:
+            sessions[alg.semiring] = GraphSession(csr, 64, capacity=4,
+                                                  seed=0)
+        sessions[alg.semiring].submit(alg)
+        for s in sessions.values():                   # shared arrival clock
+            split_loads += s.run(policy, max_supersteps=10).tile_loads
+    for s in sessions.values():
+        mf = s.run(policy)
+        assert mf.converged
+        split_loads += mf.tile_loads
+
+    print(f"tile loads: heterogeneous session {hetero_loads}, "
+          f"two per-family sessions {split_loads} "
+          f"({split_loads / max(hetero_loads, 1):.2f}x more stagings)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,16 +16,28 @@ metrics, the push dispatch).  All policies reach the same per-job fixpoint
                 queue (paper Fig. 3 "current mode").
   AllBlocks   - non-prioritized baseline: every block, every superstep.
 
+Sessions are HETEROGENEOUS (repro.core.session): jobs live in per-graph-
+view groups, but block ids are view-agnostic (every view is block-aligned
+over the same CSR), so scheduling stays a single two-level decision over
+all jobs' DO queues.  A shared policy stages each selected block ONCE per
+superstep and dispatches it through every view's push (the plus-times and
+the min-plus semiring in the same superstep) — `tile_loads` counts that
+staging once, which is what makes the cross-family CAJS saving measurable.
+
 Each policy composes with `mesh=` job-axis placement (repro.dist.graph):
-partitioning the vmapped job axis never changes per-job arithmetic, so the
+partitioning the vmapped job axes never changes per-job arithmetic, so the
 sharded run converges to the same fixpoint.
+
+Metric layout: `RunMetrics.iterations_per_job` concatenates view groups in
+creation order (`GraphSession.job_index(handle)` maps a handle to its row;
+== handle.slot for single-view sessions).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 import jax
@@ -46,81 +58,130 @@ class RunMetrics:
 
 @dataclasses.dataclass
 class Selection:
-    """One superstep's staging decision, produced by a host policy."""
+    """One superstep's staging decision, produced by a host policy.
 
-    sel: np.ndarray          # [q] (shared staging) or [J, q] (per-job)
-    msk: np.ndarray          # same shape, 1.0 = valid slot
-    shared: bool             # True: one staging serves all jobs (CAJS)
+    shared=True: `sel`/`msk` are [q] — ONE staging of each selected block
+    serves every job in every view group (CAJS; tile_loads counted once).
+    shared=False: `sel`/`msk` are per-group lists of [J_g, q] — each job
+    stages its own queue (the redundancy baseline)."""
+
+    sel: Union[np.ndarray, List[np.ndarray]]
+    msk: Union[np.ndarray, List[np.ndarray]]
+    shared: bool
     tile_loads: int
     job_block_pushes: int
 
 
 class SchedulePolicy:
-    """Base host-driven policy: subclasses implement `select`."""
+    """Base host-driven policy: subclasses implement `select`.
+
+    `select` receives per-view-group lists (creation order): node_un[g] and
+    p_mean[g] are [J_g, B_N], active[g] is [J_g] bool."""
 
     name = "abstract"
     needs_pairs = True  # driver computes <Node_un, P_mean> before select()
 
-    def select(self, sess, node_un: Optional[np.ndarray],
-               p_mean: Optional[np.ndarray],
-               active: np.ndarray) -> Optional[Selection]:
+    def select(self, sess, node_un: Optional[Sequence[np.ndarray]],
+               p_mean: Optional[Sequence[np.ndarray]],
+               active: Sequence[np.ndarray]) -> Optional[Selection]:
         """Return the staging decision, or None when nothing is schedulable
         (the driver then declares convergence)."""
         raise NotImplementedError
 
     def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
-        """Generic host driver: counts -> pairs -> select -> push."""
-        g = sess.graph
+        """Generic host driver: counts -> pairs -> select -> push, across
+        every view group each superstep."""
+        groups = sess.view_groups()
+        offs = np.cumsum([0] + [g.capacity for g in groups])
         m = RunMetrics(
-            iterations_per_job=np.zeros(sess.capacity, dtype=np.int64))
-        pairs_fn = sess._pairs_fn()
-        counts_fn = sess._counts_fn()
-        values, deltas = sess.values, sess.deltas
+            iterations_per_job=np.zeros(int(offs[-1]), dtype=np.int64))
+        counts_fns = [sess._counts_fn(g) for g in groups]
+        pairs_fns = ([sess._pairs_fn(g) for g in groups]
+                     if self.needs_pairs else None)
         for _ in range(max_supersteps):
-            counts = np.asarray(counts_fn(values, deltas))
-            active = counts > 0
-            m.iterations_per_job[active] += 1
-            if not active.any():
+            actives = []
+            for gi, g in enumerate(groups):
+                counts = np.asarray(counts_fns[gi](g.values, g.deltas))
+                act = counts > 0
+                actives.append(act)
+                m.iterations_per_job[offs[gi]:offs[gi + 1]][act] += 1
+            if not any(a.any() for a in actives):
                 m.converged = True
                 break
             node_un = p_mean = None
             if self.needs_pairs:
-                node_un, p_mean = map(np.asarray, pairs_fn(values, deltas))
-            selection = self.select(sess, node_un, p_mean, active)
+                node_un, p_mean = [], []
+                for gi, g in enumerate(groups):
+                    if not actives[gi].any():   # no device pass needed:
+                        z = np.zeros((g.capacity,   # converged pairs are 0
+                                      sess.scheduler.num_blocks),
+                                     dtype=np.float32)
+                        node_un.append(z)
+                        p_mean.append(z)
+                        continue
+                    nu, pm = map(np.asarray,
+                                 pairs_fns[gi](g.values, g.deltas))
+                    node_un.append(nu)
+                    p_mean.append(pm)
+            selection = self.select(sess, node_un, p_mean, actives)
             if selection is None:
                 m.converged = True
                 break
-            push_fn = (sess._push_shared_fn() if selection.shared
-                       else sess._push_indep_fn())
-            values, deltas = push_fn(values, deltas, g.tiles, g.nbr_ids,
-                                     jnp.asarray(selection.sel),
-                                     jnp.asarray(selection.msk),
-                                     sess.push_scale)
+            # a fully-converged group is never pushed (matches the solo
+            # session, which stops outright; for plus-times this also keeps
+            # sub-tolerance residual mass where convergence left it)
+            if selection.shared:
+                sel = jnp.asarray(selection.sel)
+                msk = jnp.asarray(selection.msk)
+                for gi, g in enumerate(groups):
+                    if not actives[gi].any():
+                        continue
+                    g.values, g.deltas = sess._push_shared_fn(g)(
+                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                        sel, msk, g.push_scale)
+            else:
+                for gi, g in enumerate(groups):
+                    if not actives[gi].any():
+                        continue
+                    g.values, g.deltas = sess._push_indep_fn(g)(
+                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                        jnp.asarray(selection.sel[gi]),
+                        jnp.asarray(selection.msk[gi]), g.push_scale)
             m.supersteps += 1
             m.tile_loads += selection.tile_loads
             m.job_block_pushes += selection.job_block_pushes
-        sess.values, sess.deltas = values, deltas
         return m
 
 
 class TwoLevel(SchedulePolicy):
-    """The paper's schedule: MPDS (host DO + global queue) + CAJS push."""
+    """The paper's schedule: MPDS (host DO + global queue) + CAJS push.
+
+    The global queue is synthesized across ALL jobs' DO queues regardless
+    of view (block ids are view-agnostic); one staging of each selected
+    block then serves both semiring families in the same superstep."""
 
     name = "two_level"
 
     def select(self, sess, node_un, p_mean, active):
-        gq = sess.scheduler.synthesize(
-            sess.scheduler.job_queues(node_un, p_mean, active))
+        sched = sess.scheduler
+        queues = []
+        for nu, pm, act in zip(node_un, p_mean, active):
+            queues.extend(sched.job_queues(nu, pm, act))
+        gq = sched.synthesize(queues)
         if len(gq) == 0:
             return None
         q = sess.q
+        # metrics honesty: only the staged prefix counts (synthesize also
+        # asserts len(gq) <= q, so this clamp is a guard, not a behaviour)
+        gq = gq[:q]
         sel = np.zeros(q, dtype=np.int32)
         msk = np.zeros(q, dtype=np.float32)
-        sel[:len(gq)] = gq[:q]
+        sel[:len(gq)] = gq
         msk[:len(gq)] = 1.0
         # CAJS: staged once, dispatched only to jobs unconverged on the block
+        pushes = sum(int((nu[:, gq] > 0).sum()) for nu in node_un)
         return Selection(sel, msk, shared=True, tile_loads=int(len(gq)),
-                         job_block_pushes=int((node_un[:, gq] > 0).sum()))
+                         job_block_pushes=pushes)
 
 
 class Independent(SchedulePolicy):
@@ -130,19 +191,22 @@ class Independent(SchedulePolicy):
 
     def select(self, sess, node_un, p_mean, active):
         q = sess.q
-        j_cap = node_un.shape[0]
-        sel = np.zeros((j_cap, q), dtype=np.int32)
-        msk = np.zeros((j_cap, q), dtype=np.float32)
+        sels, msks = [], []
         loads = pushes = 0
-        for j, qj in enumerate(
-                sess.scheduler.job_queues(node_un, p_mean, active)):
-            if len(qj) == 0:
-                continue
-            sel[j, :len(qj)] = qj[:q]
-            msk[j, :len(qj)] = 1.0
-            loads += int(len(qj))          # each job stages its own
-            pushes += int(len(qj))
-        return Selection(sel, msk, shared=False, tile_loads=loads,
+        for nu, pm, act in zip(node_un, p_mean, active):
+            j_cap = nu.shape[0]
+            sel = np.zeros((j_cap, q), dtype=np.int32)
+            msk = np.zeros((j_cap, q), dtype=np.float32)
+            for j, qj in enumerate(sess.scheduler.job_queues(nu, pm, act)):
+                if len(qj) == 0:
+                    continue
+                sel[j, :len(qj)] = qj[:q]
+                msk[j, :len(qj)] = 1.0
+                loads += int(len(qj))          # each job stages its own
+                pushes += int(len(qj))
+            sels.append(sel)
+            msks.append(msk)
+        return Selection(sels, msks, shared=False, tile_loads=loads,
                          job_block_pushes=pushes)
 
 
@@ -153,16 +217,21 @@ class AllBlocks(SchedulePolicy):
     needs_pairs = False
 
     def select(self, sess, node_un, p_mean, active):
-        bn = sess.graph.num_blocks
+        bn = sess.scheduler.num_blocks
         sel = np.arange(bn, dtype=np.int32)
         msk = np.ones(bn, dtype=np.float32)
+        n_active = sum(int(a.sum()) for a in active)
         return Selection(sel, msk, shared=True, tile_loads=bn,
-                         job_block_pushes=bn * int(active.sum()))
+                         job_block_pushes=bn * n_active)
 
 
 class Fused(SchedulePolicy):
     """Beyond-paper: entire two-level loop in one on-device while_loop.
 
+    Heterogeneous sessions run every view's while-loop body over one
+    SHARED selection: per-group priority pairs feed one global top-q, then
+    each group's semiring push (plus-times / min-plus) processes the same
+    gsel — tile_loads counts that staging once, as in the host TwoLevel.
     Per-job push/iteration counters ride in the while_loop carry so
     RunMetrics stays comparable with the host policies."""
 
@@ -170,63 +239,84 @@ class Fused(SchedulePolicy):
     needs_pairs = False
 
     def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
-        g = sess.graph
-        alg = sess.view_alg
+        groups = sess.view_groups()
+        n_groups = len(groups)
         q, alpha = sess.q, sess.alpha
-        push = sess._push_one
-        push_scale = sess.push_scale
+        bn = sess.scheduler.num_blocks
+        algs = [g.alg for g in groups]
+        graphs = [g.graph for g in groups]
+        pushes_one = [g.push_one for g in groups]
+        scales = [g.push_scale for g in groups]
         n_res = max(0, q - int(math.ceil(alpha * q)))  # reserved head slots
 
         def body(carry):
-            it, values, deltas, loads, pushes, iters = carry
-            node_un, p_mean = compute_pairs(alg, values, deltas)
-            score = prio.do_score(node_un, p_mean)          # [J, B_N]
-            topv, topi = jax.lax.top_k(score, q)            # per-job queues
-            valid = jnp.isfinite(topv)
-            w = jnp.arange(q, 0, -1, dtype=jnp.float32) * valid
-            gpri = jnp.zeros((g.num_blocks,), jnp.float32)
-            gpri = gpri.at[topi.reshape(-1)].add(w.reshape(-1))
-            # reserve: force per-job heads into the queue (device analogue of
-            # the paper's (1-alpha)q individual-head slots)
-            if n_res > 0:
-                heads = topi[:, 0]
-                head_valid = valid[:, 0]
-                gpri = gpri.at[heads].add(
-                    jnp.where(head_valid, 1e12, 0.0))
+            it, vs, ds, loads, pushes, iters = carry
+            node_uns = []
+            gpri = jnp.zeros((bn,), jnp.float32)
+            for gi in range(n_groups):
+                node_un, p_mean = compute_pairs(algs[gi], vs[gi], ds[gi])
+                node_uns.append(node_un)
+                score = prio.do_score(node_un, p_mean)      # [J_g, B_N]
+                topv, topi = jax.lax.top_k(score, q)        # per-job queues
+                valid = jnp.isfinite(topv)
+                w = jnp.arange(q, 0, -1, dtype=jnp.float32) * valid
+                gpri = gpri.at[topi.reshape(-1)].add(w.reshape(-1))
+                # reserve: force per-job heads into the queue (device
+                # analogue of the paper's (1-alpha)q individual-head slots)
+                if n_res > 0:
+                    heads = topi[:, 0]
+                    head_valid = valid[:, 0]
+                    gpri = gpri.at[heads].add(
+                        jnp.where(head_valid, 1e12, 0.0))
             gv, gsel = jax.lax.top_k(gpri, q)
             gmask = (gv > 0.0).astype(jnp.float32)
-            # metrics, same definitions as the host TwoLevel policy:
-            # a (job, block) processing event needs the block selected AND
-            # the job unconverged on it; a job iterates while any block is hot.
-            # float32 accumulator like `loads`: int32 would wrap on long runs
-            # (J*q per step), float32 only rounds past 2^24
-            pushes = pushes + jnp.sum(
-                ((node_un[:, gsel] > 0) & (gmask > 0)[None, :])
-                .astype(jnp.float32))
-            iters = iters + jnp.any(node_un > 0, axis=1).astype(jnp.int32)
-            values, deltas = jax.vmap(
-                push, in_axes=(0, 0, None, None, None, None, 0))(
-                values, deltas, g.tiles, g.nbr_ids,
-                gsel.astype(jnp.int32), gmask, push_scale)
-            return (it + 1, values, deltas, loads + jnp.sum(gmask),
-                    pushes, iters)
+            new_vs, new_ds, new_iters = [], [], []
+            for gi in range(n_groups):
+                # metrics, same definitions as the host TwoLevel policy:
+                # a (job, block) processing event needs the block selected
+                # AND the job unconverged on it; a job iterates while any
+                # block is hot.  float32 accumulator like `loads`: int32
+                # would wrap on long runs (J*q per step), float32 only
+                # rounds past 2^24
+                pushes = pushes + jnp.sum(
+                    ((node_uns[gi][:, gsel] > 0) & (gmask > 0)[None, :])
+                    .astype(jnp.float32))
+                new_iters.append(
+                    iters[gi]
+                    + jnp.any(node_uns[gi] > 0, axis=1).astype(jnp.int32))
+                v2, d2 = jax.vmap(
+                    pushes_one[gi],
+                    in_axes=(0, 0, None, None, None, None, 0))(
+                    vs[gi], ds[gi], graphs[gi].tiles, graphs[gi].nbr_ids,
+                    gsel.astype(jnp.int32), gmask, scales[gi])
+                new_vs.append(v2)
+                new_ds.append(d2)
+            # one staging of each selected block serves every view group
+            return (it + 1, tuple(new_vs), tuple(new_ds),
+                    loads + jnp.sum(gmask), pushes, tuple(new_iters))
 
         def cond(carry):
-            it, values, deltas, _, _, _ = carry
-            un = jnp.sum(alg.unconverged(values, deltas))
+            it, vs, ds, _, _, _ = carry
+            un = sum(jnp.sum(algs[gi].unconverged(vs[gi], ds[gi]))
+                     for gi in range(n_groups))
             return (un > 0) & (it < max_supersteps)
 
-        it, values, deltas, loads, pushes, iters = jax.lax.while_loop(
+        it, vs, ds, loads, pushes, iters = jax.lax.while_loop(
             cond, body,
-            (jnp.int32(0), sess.values, sess.deltas, jnp.float32(0),
-             jnp.float32(0), jnp.zeros(sess.capacity, jnp.int32)))
-        sess.values, sess.deltas = values, deltas
+            (jnp.int32(0),
+             tuple(g.values for g in groups),
+             tuple(g.deltas for g in groups),
+             jnp.float32(0), jnp.float32(0),
+             tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups)))
+        for gi, g in enumerate(groups):
+            g.values, g.deltas = vs[gi], ds[gi]
         m = RunMetrics()
         m.supersteps = int(it)
         m.tile_loads = int(loads)
         m.job_block_pushes = int(pushes)
         m.converged = bool(int(it) < max_supersteps)
-        m.iterations_per_job = np.asarray(iters, dtype=np.int64)
+        m.iterations_per_job = np.concatenate(
+            [np.asarray(x, dtype=np.int64) for x in iters])
         return m
 
 

@@ -73,7 +73,12 @@ class TwoLevelScheduler:
     def synthesize(self, queues: Sequence[np.ndarray],
                    q: Optional[int] = None) -> np.ndarray:
         q = self.q if q is None else q
-        return global_queue(queues, self.num_blocks, q, self.alpha)
+        gq = global_queue(queues, self.num_blocks, q, self.alpha)
+        # metrics honesty: callers stage (and count) exactly len(gq) blocks,
+        # so the synthesis must never hand back more than fit in the queue
+        assert len(gq) <= max(1, q), \
+            f"global queue overflows its budget: {len(gq)} > {q}"
+        return gq
 
     def select(self, node_un: np.ndarray, p_mean: np.ndarray,
                active: Optional[np.ndarray] = None,

@@ -3,7 +3,7 @@
 The paper's premise is massive concurrent jobs ARRIVING AND LEAVING while
 sharing one graph (its §4.4 API has `initPtable` for a "newly-arrived
 job"), yet the historical engine API only ran a fixed job set to a joint
-fixpoint.  A GraphSession owns the shared BlockedGraph and exposes:
+fixpoint.  A GraphSession owns the shared graph data and exposes:
 
   submit(alg) -> JobHandle     admit a job at ANY superstep
   run(policy, max_supersteps)  advance all active jobs under a SchedulePolicy
@@ -12,22 +12,34 @@ fixpoint.  A GraphSession owns the shared BlockedGraph and exposes:
   result(handle)               per-job result extraction
   detach(handle)               release the job's slot for reuse
 
-Internally the session maintains a PADDED [J_cap, B_N, Vb] job axis plus an
+Sessions are HETEROGENEOUS: jobs from both semiring families (PageRank/
+PPR/Katz under plus-times, SSSP/BFS/WCC under min-plus) coexist over one
+shared CSR.  Internally the session keeps a registry of ViewGroups, one
+per graph-view key `(semiring, fill, normalize, symmetrize)`.  Each view's
+BlockedGraph is derived lazily from the shared CSR with the SAME block
+size, so block id b names the same vertex range in every view — which is
+what lets one scheduling decision (a set of block ids) drive every family
+at once: the paper's CAJS staging of block b serves the plus-times push
+and the min-plus push in the same superstep, and `RunMetrics.tile_loads`
+counts that staging once.
+
+Each group maintains a PADDED [J_view_cap, B_N, Vb] job axis plus an
 active mask, so jitted push shapes stay stable across arrivals/departures:
 free slots hold the semiring's inert state (delta 0 / +inf), which makes
 them arithmetic no-ops in every policy — no re-tracing on submit/detach.
-Slots are recycled; handle generations catch stale use.  Capacity doubles
-(one re-trace) only when submissions exceed it.
+Slots are recycled; handle generations catch stale use.  A group's
+capacity doubles (one re-trace) only when submissions exceed it.
 
 `run(..., mesh=...)` composes any policy with job-axis placement from
-repro.dist.graph (tiles replicated, job state sharded).
+repro.dist.graph (every view's tiles replicated, every group's job state
+sharded over its own job axis).
 """
 
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 import jax
@@ -40,7 +52,7 @@ from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
                                   PRITER_C)
 from repro.core.do_select import DEFAULT_SAMPLES
 from repro.core.global_q import DEFAULT_ALPHA
-from repro.graph.structure import CSRGraph, build_blocked
+from repro.graph.structure import BlockedGraph, CSRGraph, build_blocked
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,15 +62,59 @@ class JobHandle:
     slot: int
     gen: int
     alg: Algorithm
+    view: Optional[tuple] = None   # graph-view key; derived from alg if None
 
 
-def _view_key(alg: Algorithm):
+def _view_key(alg: Algorithm) -> tuple:
     return (alg.semiring, alg.graph_fill, alg.graph_normalize,
             alg.graph_symmetrize)
 
 
+@dataclasses.dataclass
+class ViewGroup:
+    """One graph view + the padded job axis of every job using it.
+
+    `alg` is the view's exemplar (the first job submitted into it): it
+    supplies the pair computation / convergence test / inert fill for the
+    whole group, exactly as the pre-heterogeneous session used its first
+    submitted algorithm.  All jobs in a group share the semiring by
+    construction (the semiring is part of the view key).
+    """
+
+    key: tuple
+    alg: Algorithm
+    graph: BlockedGraph
+    push_one: Callable
+    values: jnp.ndarray       # [cap, B_N, Vb]
+    deltas: jnp.ndarray       # [cap, B_N, Vb]
+    push_scale: jnp.ndarray   # [cap]
+    algs: List[Optional[Algorithm]]
+    active: np.ndarray        # [cap] bool
+    gens: List[int]
+
+    @property
+    def capacity(self) -> int:
+        return len(self.algs)
+
+    @property
+    def semiring(self) -> str:
+        return self.key[0]
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+
+def _inert_state(semiring: str, g: BlockedGraph, n: int):
+    """State for free slots: converged-everywhere, pushes are no-ops."""
+    fill = 0.0 if semiring == PLUS_TIMES else jnp.inf
+    shape = (n, g.num_blocks, g.block_size)
+    return (jnp.full(shape, fill, dtype=jnp.float32),
+            jnp.full(shape, fill, dtype=jnp.float32))
+
+
 class GraphSession:
-    """Owns one shared BlockedGraph + a padded, recyclable job axis."""
+    """Owns the shared graph data + per-view padded, recyclable job axes."""
 
     def __init__(self, csr: Optional[CSRGraph] = None, block_size: int = 64,
                  *, capacity: int = 4, c: float = PRITER_C,
@@ -66,22 +122,17 @@ class GraphSession:
                  seed: int = 0, use_pallas: bool = False):
         self._csr = csr
         self.block_size = block_size
-        self.capacity = max(1, int(capacity))
+        self._capacity0 = max(1, int(capacity))   # initial per-view capacity
         self.c = c
         self._alpha = alpha
         self._samples = samples
         self._seed = seed
         self.use_pallas = use_pallas
-        # populated on first submit (the graph view depends on the algorithm)
-        self.graph = None
-        self.view_alg: Optional[Algorithm] = None
+        # view registry, populated lazily on submit (insertion-ordered; the
+        # order defines the concatenated job-metric layout, see job_index)
+        self.groups: Dict[tuple, ViewGroup] = {}
         self.scheduler: Optional[TwoLevelScheduler] = None
         self.q = 0
-        self._push_one = None
-        self.values = self.deltas = self.push_scale = None
-        self.algs: List[Optional[Algorithm]] = [None] * self.capacity
-        self.active = np.zeros(self.capacity, dtype=bool)
-        self._gens = [0] * self.capacity
         self._jit_cache = {}
 
     # alpha/samples/seed live canonically on the scheduler once it exists
@@ -118,6 +169,64 @@ class GraphSession:
         if self.scheduler:
             self.scheduler.reset(value)  # re-seeds AND restarts the stream
 
+    # -- view registry -------------------------------------------------------
+
+    def view_groups(self) -> List[ViewGroup]:
+        """All view groups in creation order (the metric layout order)."""
+        return list(self.groups.values())
+
+    @property
+    def total_capacity(self) -> int:
+        return sum(g.capacity for g in self.groups.values())
+
+    @property
+    def capacity(self) -> int:
+        """Total padded slots across views (initial capacity pre-submit)."""
+        return self.total_capacity if self.groups else self._capacity0
+
+    def _sole_group(self) -> ViewGroup:
+        if len(self.groups) != 1:
+            raise ValueError(
+                f"session holds {len(self.groups)} graph views; "
+                "per-view state has no single values/deltas/graph — use "
+                "view_groups()")
+        return next(iter(self.groups.values()))
+
+    # single-view compatibility surface (the legacy engine shim and all
+    # homogeneous callers): delegates to the one group
+
+    @property
+    def graph(self):
+        return next(iter(self.groups.values())).graph if self.groups else None
+
+    @property
+    def view_alg(self) -> Optional[Algorithm]:
+        return next(iter(self.groups.values())).alg if self.groups else None
+
+    @property
+    def values(self):
+        return self._sole_group().values
+
+    @values.setter
+    def values(self, v) -> None:
+        self._sole_group().values = v
+
+    @property
+    def deltas(self):
+        return self._sole_group().deltas
+
+    @deltas.setter
+    def deltas(self, d) -> None:
+        self._sole_group().deltas = d
+
+    @property
+    def push_scale(self):
+        return self._sole_group().push_scale
+
+    @push_scale.setter
+    def push_scale(self, p) -> None:
+        self._sole_group().push_scale = p
+
     # -- construction from a legacy ConcurrentRun ---------------------------
 
     @classmethod
@@ -125,166 +234,197 @@ class GraphSession:
                  alpha: float = DEFAULT_ALPHA,
                  samples: int = DEFAULT_SAMPLES, seed: int = 0,
                  use_pallas: bool = False) -> "GraphSession":
-        """Adopt a pre-built ConcurrentRun: capacity == J, no padding, so
-        the legacy engine shim stays bit-identical to the historical API."""
+        """Adopt a pre-built ConcurrentRun: one view, capacity == J, no
+        padding, so the legacy engine shim stays bit-identical to the
+        historical API."""
         sess = cls(None, run.graph.block_size, capacity=run.num_jobs,
                    c=c, alpha=alpha, samples=samples, seed=seed,
                    use_pallas=use_pallas)
-        sess._install_graph(run.graph, run.algs[0])
-        sess.values = run.values
-        sess.deltas = run.deltas
-        sess.push_scale = run.push_scale
-        sess.algs = list(run.algs)
-        sess.active[:] = True
+        a0 = run.algs[0]
+        sess._install_scheduler(run.graph)
+        sess.groups[_view_key(a0)] = ViewGroup(
+            key=_view_key(a0), alg=a0, graph=run.graph,
+            push_one=(push_plus_one if a0.semiring == PLUS_TIMES
+                      else push_min_one),
+            values=run.values, deltas=run.deltas, push_scale=run.push_scale,
+            algs=list(run.algs),
+            active=np.ones(run.num_jobs, dtype=bool),
+            gens=[0] * run.num_jobs)
         return sess
 
-    # -- graph / state initialisation ---------------------------------------
+    # -- graph / scheduler initialisation ------------------------------------
 
-    def _install_graph(self, g, view_alg: Algorithm) -> None:
-        self.graph = g
-        self.view_alg = view_alg
-        self.q = optimal_queue_length(g.num_blocks, g.n_real, self.c)
-        self.scheduler = TwoLevelScheduler(
-            g.num_blocks, self.q, alpha=self.alpha, samples=self.samples,
-            seed=self.seed)
-        self._push_one = (push_plus_one
-                          if view_alg.semiring == PLUS_TIMES
-                          else push_min_one)
+    def _install_scheduler(self, g: BlockedGraph) -> None:
+        """First view sets q + the scheduler; later views must be
+        block-aligned (same B_N ⇒ block id b names the same vertex range in
+        every view), which same-n/same-block-size construction guarantees."""
+        if self.scheduler is None:
+            self.q = optimal_queue_length(g.num_blocks, g.n_real, self.c)
+            self.scheduler = TwoLevelScheduler(
+                g.num_blocks, self.q, alpha=self.alpha, samples=self.samples,
+                seed=self.seed)
+        elif g.num_blocks != self.scheduler.num_blocks:
+            raise ValueError(
+                f"view is not block-aligned: {g.num_blocks} blocks != "
+                f"{self.scheduler.num_blocks}")
 
-    def _inert_state(self, n: int):
-        """State for free slots: converged-everywhere, pushes are no-ops."""
-        g = self.graph
-        fill = 0.0 if self.view_alg.semiring == PLUS_TIMES else jnp.inf
-        shape = (n, g.num_blocks, g.block_size)
-        return (jnp.full(shape, fill, dtype=jnp.float32),
-                jnp.full(shape, fill, dtype=jnp.float32))
-
-    def _ensure_graph(self, alg: Algorithm) -> None:
-        if self.graph is not None:
-            if _view_key(alg) != _view_key(self.view_alg):
-                raise ValueError(
-                    "concurrent jobs must share one graph view: "
-                    f"{_view_key(alg)} != {_view_key(self.view_alg)}")
-            return
+    def _group_for(self, alg: Algorithm) -> ViewGroup:
+        key = _view_key(alg)
+        grp = self.groups.get(key)
+        if grp is not None:
+            return grp
         if self._csr is None:
             raise ValueError("GraphSession needs a CSRGraph to build from")
         g_csr = (self._csr.symmetrized() if alg.graph_symmetrize
                  else self._csr)
         g = build_blocked(g_csr, self.block_size, fill=alg.graph_fill,
                           normalize=alg.graph_normalize)
-        self._install_graph(g, alg)
-        self.values, self.deltas = self._inert_state(self.capacity)
-        self.push_scale = jnp.ones(self.capacity, dtype=jnp.float32)
+        self._install_scheduler(g)
+        cap = self._capacity0
+        values, deltas = _inert_state(alg.semiring, g, cap)
+        grp = ViewGroup(
+            key=key, alg=alg, graph=g,
+            push_one=(push_plus_one if alg.semiring == PLUS_TIMES
+                      else push_min_one),
+            values=values, deltas=deltas,
+            push_scale=jnp.ones(cap, dtype=jnp.float32),
+            algs=[None] * cap, active=np.zeros(cap, dtype=bool),
+            gens=[0] * cap)
+        self.groups[key] = grp
+        return grp
 
-    def _grow(self) -> None:
-        extra = self.capacity
-        iv, idl = self._inert_state(extra)
-        self.values = jnp.concatenate([self.values, iv])
-        self.deltas = jnp.concatenate([self.deltas, idl])
-        self.push_scale = jnp.concatenate(
-            [self.push_scale, jnp.ones(extra, dtype=jnp.float32)])
-        self.algs.extend([None] * extra)
-        self._gens.extend([0] * extra)
-        self.active = np.concatenate(
-            [self.active, np.zeros(extra, dtype=bool)])
-        self.capacity += extra
+    def _grow(self, grp: ViewGroup) -> None:
+        extra = grp.capacity
+        iv, idl = _inert_state(grp.semiring, grp.graph, extra)
+        grp.values = jnp.concatenate([grp.values, iv])
+        grp.deltas = jnp.concatenate([grp.deltas, idl])
+        grp.push_scale = jnp.concatenate(
+            [grp.push_scale, jnp.ones(extra, dtype=jnp.float32)])
+        grp.algs.extend([None] * extra)
+        grp.gens.extend([0] * extra)
+        grp.active = np.concatenate(
+            [grp.active, np.zeros(extra, dtype=bool)])
 
     # -- job lifecycle -------------------------------------------------------
 
     @property
     def num_active(self) -> int:
-        return int(self.active.sum())
+        return sum(g.num_active for g in self.groups.values())
 
     def submit(self, alg: Algorithm) -> JobHandle:
-        """Admit a job at any superstep; recycles a free slot or grows."""
-        self._ensure_graph(alg)
-        free = np.nonzero(~self.active)[0]
+        """Admit a job at any superstep; recycles a free slot or grows its
+        view group.  Jobs of a NEW graph view build that view lazily from
+        the shared CSR and coexist with every already-running family."""
+        grp = self._group_for(alg)
+        free = np.nonzero(~grp.active)[0]
         if len(free) == 0:
-            self._grow()
-            free = np.nonzero(~self.active)[0]
+            self._grow(grp)
+            free = np.nonzero(~grp.active)[0]
         slot = int(free[0])
-        v, d = alg.init(self.graph)
-        self.values = self.values.at[slot].set(v)
-        self.deltas = self.deltas.at[slot].set(d)
-        self.push_scale = self.push_scale.at[slot].set(alg.get_push_scale())
-        self.algs[slot] = alg
-        self.active[slot] = True
-        return JobHandle(slot=slot, gen=self._gens[slot], alg=alg)
+        v, d = alg.init(grp.graph)
+        grp.values = grp.values.at[slot].set(v)
+        grp.deltas = grp.deltas.at[slot].set(d)
+        grp.push_scale = grp.push_scale.at[slot].set(alg.get_push_scale())
+        grp.algs[slot] = alg
+        grp.active[slot] = True
+        return JobHandle(slot=slot, gen=grp.gens[slot], alg=alg, view=grp.key)
 
-    def _check(self, handle: JobHandle) -> None:
-        if not (0 <= handle.slot < self.capacity) \
-                or self._gens[handle.slot] != handle.gen \
-                or not self.active[handle.slot]:
+    def _handle_group(self, handle: JobHandle) -> ViewGroup:
+        key = handle.view if handle.view is not None else _view_key(handle.alg)
+        grp = self.groups.get(key)
+        if grp is None or not (0 <= handle.slot < grp.capacity) \
+                or grp.gens[handle.slot] != handle.gen \
+                or not grp.active[handle.slot]:
             raise KeyError(f"stale or unknown job handle {handle}")
+        return grp
+
+    def job_index(self, handle: JobHandle) -> int:
+        """Index of this job in the concatenated per-group layout used by
+        `unconverged_counts()` and `RunMetrics.iterations_per_job` (view
+        groups in creation order, slots within a group).  For a single-view
+        session this equals `handle.slot`."""
+        grp = self._handle_group(handle)
+        off = 0
+        for g in self.groups.values():
+            if g is grp:
+                return off + handle.slot
+            off += g.capacity
+        raise KeyError(f"unknown view for handle {handle}")
 
     def unconverged_counts(self) -> np.ndarray:
-        """[J_cap] unconverged-vertex count per slot (0 for free slots) —
-        one device reduction; index by handle.slot to poll many handles."""
-        return np.asarray(self._counts_fn()(self.values, self.deltas))
+        """[total_capacity] unconverged-vertex count per slot, view groups
+        concatenated in creation order (0 for free slots) — one device
+        reduction per view; index by `job_index(handle)` to poll many
+        handles (== handle.slot for single-view sessions)."""
+        parts = [np.asarray(self._counts_fn(g)(g.values, g.deltas))
+                 for g in self.groups.values()]
+        return (np.concatenate(parts) if parts
+                else np.zeros(0, dtype=np.int32))
 
     def converged(self, handle: JobHandle) -> bool:
-        self._check(handle)
-        return bool(self.unconverged_counts()[handle.slot] == 0)
+        grp = self._handle_group(handle)
+        counts = np.asarray(self._counts_fn(grp)(grp.values, grp.deltas))
+        return bool(counts[handle.slot] == 0)
 
     def result(self, handle: JobHandle) -> np.ndarray:
         """[n_real] result for one job (valid at any superstep)."""
-        self._check(handle)
-        res = handle.alg.result(self.values[handle.slot],
-                                self.deltas[handle.slot])
-        return np.asarray(res).reshape(-1)[:self.graph.n_real]
+        grp = self._handle_group(handle)
+        res = handle.alg.result(grp.values[handle.slot],
+                                grp.deltas[handle.slot])
+        return np.asarray(res).reshape(-1)[:grp.graph.n_real]
 
     def detach(self, handle: JobHandle) -> np.ndarray:
         """Extract the job's result and free its slot for reuse."""
         res = self.result(handle)
+        grp = self._handle_group(handle)
         slot = handle.slot
-        iv, idl = self._inert_state(1)
-        self.values = self.values.at[slot].set(iv[0])
-        self.deltas = self.deltas.at[slot].set(idl[0])
-        self.push_scale = self.push_scale.at[slot].set(1.0)
-        self.algs[slot] = None
-        self.active[slot] = False
-        self._gens[slot] += 1
+        iv, idl = _inert_state(grp.semiring, grp.graph, 1)
+        grp.values = grp.values.at[slot].set(iv[0])
+        grp.deltas = grp.deltas.at[slot].set(idl[0])
+        grp.push_scale = grp.push_scale.at[slot].set(1.0)
+        grp.algs[slot] = None
+        grp.active[slot] = False
+        grp.gens[slot] += 1
         return res
 
-    # -- jitted primitives (shared by every policy) --------------------------
+    # -- jitted primitives (shared by every policy), cached per view ---------
 
-    def _pairs_fn(self):
-        key = "pairs"
+    def _pairs_fn(self, grp: ViewGroup):
+        key = ("pairs", grp.key)
         if key not in self._jit_cache:
-            alg = self.view_alg
+            alg = grp.alg
             self._jit_cache[key] = jax.jit(
                 lambda v, d: compute_pairs(alg, v, d))
         return self._jit_cache[key]
 
-    def _counts_fn(self):
-        key = "counts"
+    def _counts_fn(self, grp: ViewGroup):
+        key = ("counts", grp.key)
         if key not in self._jit_cache:
-            alg = self.view_alg
+            alg = grp.alg
             self._jit_cache[key] = jax.jit(
                 lambda v, d: jnp.sum(alg.unconverged(v, d), axis=(1, 2)))
         return self._jit_cache[key]
 
-    def _push_shared_fn(self):
-        """All jobs process the same selected blocks (CAJS)."""
-        key = ("push_shared", self.use_pallas)
+    def _push_shared_fn(self, grp: ViewGroup):
+        """All jobs of the view process the same selected blocks (CAJS)."""
+        key = ("push_shared", grp.key, self.use_pallas)
         if key not in self._jit_cache:
             if self.use_pallas:
                 from repro.kernels.mj_spmm import ops as mj_ops
-                fn = partial(mj_ops.push_shared,
-                             semiring=self.view_alg.semiring)
+                fn = partial(mj_ops.push_shared, semiring=grp.semiring)
                 self._jit_cache[key] = jax.jit(
                     lambda v, d, t, n, si, sm, ps: fn(v, d, t, n, si, sm, ps))
             else:
-                push = self._push_one
+                push = grp.push_one
                 self._jit_cache[key] = jax.jit(jax.vmap(
                     push, in_axes=(0, 0, None, None, None, None, 0)))
         return self._jit_cache[key]
 
-    def _push_indep_fn(self):
+    def _push_indep_fn(self, grp: ViewGroup):
         """Each job processes its own selection (redundancy baseline)."""
-        key = "push_indep"
+        key = ("push_indep", grp.key)
         if key not in self._jit_cache:
-            push = self._push_one
+            push = grp.push_one
             self._jit_cache[key] = jax.jit(jax.vmap(
                 push, in_axes=(0, 0, None, None, 0, 0, 0)))
         return self._jit_cache[key]
@@ -292,15 +432,15 @@ class GraphSession:
     # -- placement -----------------------------------------------------------
 
     def _place(self, mesh) -> None:
-        """Shard the job axis over `mesh` (repro.dist.graph): tiles
-        replicated per device, values/deltas job-sharded.  Scheduling is
-        unchanged — SPMD partitions the vmapped pushes along the job axis,
-        so per-job arithmetic (and the fixpoint) is identical."""
+        """Shard every view group's job axis over `mesh` (repro.dist.graph):
+        each view's tiles replicated per device, its values/deltas
+        job-sharded.  Scheduling is unchanged — SPMD partitions the vmapped
+        pushes along each job axis, so per-job arithmetic (and the fixpoint)
+        is identical."""
         if mesh is None:
             return
-        from repro.dist.graph import shard_job_state
-        self.values, self.deltas, self.push_scale = shard_job_state(
-            mesh, self.values, self.deltas, self.push_scale, self.graph)
+        from repro.dist.graph import shard_session
+        shard_session(mesh, self)
 
     # -- driving -------------------------------------------------------------
 
@@ -310,7 +450,7 @@ class GraphSession:
 
         Jobs submitted after this returns resume from the shared state:
         call run() again to drive the new mix — that is the arrival model."""
-        if self.graph is None:
+        if not self.groups:
             raise ValueError("no jobs submitted yet")
         policy = TwoLevel() if policy is None else policy
         self._place(mesh)

@@ -76,6 +76,21 @@ def shard_job_state(mesh: Mesh, values, deltas, push_scale, graph,
             jax.device_put(push_scale, jobs1))
 
 
+def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
+    """Place a (possibly heterogeneous) GraphSession on `mesh`: EVERY view
+    group's job axis is sharded independently (each view keeps its own
+    padded [J_view_cap, B_N, Vb] state) and every view's tiles are
+    replicated, so each device stages a selected block once per view and
+    serves all jobs resident on it.  Groups whose job axis does not divide
+    the mesh fall back to replication (identical math), per group — a
+    divisible plus-times group shards even when the min-plus group cannot."""
+    for grp in session.view_groups():
+        grp.values, grp.deltas, grp.push_scale = shard_job_state(
+            mesh, grp.values, grp.deltas, grp.push_scale, grp.graph,
+            axis_name)
+    return session
+
+
 def shard_run(run, mesh: Mesh, axis_name: Optional[str] = None):
     """Place a ConcurrentRun on `mesh`: job state sharded over the job axis,
     graph replicated.  Returns a new ConcurrentRun."""

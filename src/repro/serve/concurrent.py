@@ -16,6 +16,16 @@ design is exactly that the policy core is data-structure-agnostic.
 Admission is deterministic (streams visited in sorted id order, not dict
 insertion order) and linear in the number of waiting requests (per-group
 FIFO cursors instead of repeated list scans/removals).
+
+Streams are HETEROGENEOUS, mirroring GraphSession's mixed-semiring jobs:
+a stream declares a `family` (the workload kind it decodes — e.g. a
+"pagerank"-style analytics stream next to an "sssp"-style route-query
+stream, or chat next to batch summarization).  Families never partition
+admission: request groups are shared data, so ONE global queue is
+synthesized across every stream's DO queue regardless of family and one
+weights pass serves the whole admitted batch — the serve-layer analogue of
+one tile staging serving both semiring pushes.  `schedule_step` reports
+the per-family admitted mix so operators can see the sharing.
 """
 
 from __future__ import annotations
@@ -38,10 +48,14 @@ class Request:
 
 
 class RequestStream:
-    """One tenant's queue of requests ('job')."""
+    """One tenant's queue of requests ('job').
 
-    def __init__(self, stream_id: int):
+    `family` tags the workload kind (the serve analogue of a graph job's
+    semiring family); mixed-family streams share one admission pass."""
+
+    def __init__(self, stream_id: int, family: str = "default"):
         self.stream_id = stream_id
+        self.family = family
         self.waiting: List[Request] = []
 
     def add(self, req: Request):
@@ -58,6 +72,8 @@ class ConcurrentServeScheduler:
         self.scheduler = TwoLevelScheduler(
             n_groups, max(1, batch_budget // 4), alpha=alpha, seed=seed)
         self.streams: Dict[int, RequestStream] = {}
+        # per-family admitted counts of the most recent schedule_step
+        self.last_admitted_by_family: Dict[str, int] = {}
 
     # batch_budget is mutable between steps (schedule_step recomputes q from
     # it); alpha lives canonically on the scheduler, delegated for the same
@@ -135,8 +151,12 @@ class ConcurrentServeScheduler:
                 full = admit(si, i)
                 if full:
                     break
+        by_family: Dict[str, int] = {}
         for si, stream in enumerate(streams):
             if taken[si]:
                 stream.waiting = [r for i, r in enumerate(stream.waiting)
                                   if i not in taken[si]]
+                by_family[stream.family] = (by_family.get(stream.family, 0)
+                                            + len(taken[si]))
+        self.last_admitted_by_family = by_family
         return admitted

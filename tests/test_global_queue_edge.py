@@ -136,3 +136,32 @@ def test_schedule_step_drains_fifo_within_a_group():
     admitted = sched.schedule_step()
     assert [r.urgency for r in admitted] == [1.0, 2.0, 3.0]
     assert s.waiting == []
+
+
+def test_schedule_step_mixed_family_streams_share_one_admission_pass():
+    """Heterogeneous streams (the serve analogue of mixed-semiring graph
+    jobs): families never partition admission — one global queue spans all
+    streams, the shared hot group serves BOTH families in one batch, and
+    the per-family mix is reported."""
+    sched = ConcurrentServeScheduler(n_groups=8, batch_budget=4, seed=0)
+    s_pr = RequestStream(1, family="pagerank")
+    s_route = RequestStream(2, family="sssp")
+    sched.add_stream(s_pr)
+    sched.add_stream(s_route)
+    for i in range(3):
+        s_pr.add(Request(1, 3, urgency=5.0, tokens_left=10))
+        s_route.add(Request(2, 3, urgency=4.0, tokens_left=10))
+    s_route.add(Request(2, 6, urgency=0.1, tokens_left=10))
+    admitted = sched.schedule_step()
+    assert len(admitted) == 4
+    # the shared hot group 3 dominates and serves both families
+    assert sum(r.group == 3 for r in admitted) >= 3
+    assert {r.stream_id for r in admitted} == {1, 2}
+    mix = sched.last_admitted_by_family
+    assert set(mix) == {"pagerank", "sssp"}
+    assert sum(mix.values()) == 4
+
+
+def test_request_stream_default_family_back_compat():
+    s = RequestStream(7)
+    assert s.family == "default"

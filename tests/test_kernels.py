@@ -119,6 +119,7 @@ def test_push_shared_kernel_matches_engine_push():
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2))
 
 
+@pytest.mark.slow
 def test_engine_with_pallas_end_to_end():
     """ConcurrentEngine(use_pallas=True) reaches the same PageRank fixpoint."""
     import networkx as nx
@@ -140,3 +141,52 @@ def test_engine_with_pallas_end_to_end():
         ref = nx.pagerank(g, alpha=damp, tol=1e-12, max_iter=500)
         ref = np.array([ref[i] for i in range(csr.n)]) * csr.n
         np.testing.assert_allclose(res[jidx], ref, rtol=5e-3, atol=1e-4)
+
+
+@pytest.mark.slow
+def test_session_with_pallas_min_plus_end_to_end():
+    """GraphSession(use_pallas=True) on the MIN_PLUS path (SSSP + BFS, two
+    views): result() is BIT-EQUAL to the jnp push — the min-plus fixpoint
+    is schedule-invariant and min is exact in any evaluation order, so the
+    kernel route may not perturb a single distance."""
+    from repro.algorithms import BFS, SSSP
+    from repro.core import GraphSession, TwoLevel
+    from repro.graph import uniform_graph
+
+    csr = uniform_graph(150, 4, seed=21, weighted=True, w_max=7.0)
+    algs = [SSSP(source=0), SSSP(source=33), BFS(source=7)]
+    results = {}
+    for use_pallas in (False, True):
+        sess = GraphSession(csr, 16, capacity=4, seed=3,
+                            use_pallas=use_pallas)
+        handles = [sess.submit(a) for a in algs]
+        assert sess.run(TwoLevel(), 20000).converged
+        results[use_pallas] = [sess.result(h) for h in handles]
+    for jnp_res, pallas_res in zip(results[False], results[True]):
+        np.testing.assert_array_equal(pallas_res, jnp_res)
+
+
+@pytest.mark.slow
+def test_session_with_pallas_heterogeneous_end_to_end():
+    """A heterogeneous session under use_pallas=True: ONE selection per
+    superstep drives the kernel-backed plus-times push AND the kernel-backed
+    min-plus push.  The min-plus job is bit-equal to the jnp route; the
+    plus-times job matches within float tolerance (the kernel's contraction
+    order may differ from einsum, which can shift the schedule's residual
+    sub-tolerance mass)."""
+    from repro.algorithms import PageRank, SSSP
+    from repro.core import GraphSession, TwoLevel
+    from repro.graph import rmat_graph
+
+    csr = rmat_graph(150, 4, seed=13)
+    res = {}
+    for use_pallas in (False, True):
+        sess = GraphSession(csr, 16, capacity=2, seed=5,
+                            use_pallas=use_pallas)
+        h_pr = sess.submit(PageRank())
+        h_ss = sess.submit(SSSP(source=3))
+        assert sess.run(TwoLevel(), 20000).converged
+        res[use_pallas] = (sess.result(h_pr), sess.result(h_ss))
+    np.testing.assert_array_equal(res[True][1], res[False][1])
+    np.testing.assert_allclose(res[True][0], res[False][0],
+                               rtol=1e-4, atol=1e-6)

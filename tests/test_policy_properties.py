@@ -1,0 +1,112 @@
+"""Property-based cross-policy equivalence suite.
+
+All four schedule policies (TwoLevel, Fused, Independent, AllBlocks) are
+schedules over the SAME delta-accumulative semiring arithmetic, so on any
+graph × job mix they must reach the same per-job fixpoint: exactly for
+min-plus (the fixpoint is schedule-invariant — min is idempotent and
+path sums accumulate in path order), and within a tight tolerance for
+plus-times (a schedule decides where the residual sub-tolerance mass
+sits).  Random small CSRs × heterogeneous job mixes × seeds probe that
+invariant, plus the lifecycle property that detach+resubmit mid-run never
+perturbs surviving jobs.
+
+Runs under the real `hypothesis` when installed, else the deterministic
+shim in tests/_hypothesis_shim.py (registered by conftest).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms import BFS, Katz, PageRank, PersonalizedPageRank, SSSP
+from repro.algorithms.base import MIN_PLUS
+from repro.core import AllBlocks, Fused, GraphSession, Independent, TwoLevel
+from repro.graph.structure import CSRGraph
+
+pytestmark = pytest.mark.slow
+
+BLOCK = 16
+
+
+def _random_csr(seed: int, n: int, deg: int, weighted: bool) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    m = n * deg
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = (rng.uniform(0.5, 4.0, m).astype(np.float32) if weighted else None)
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+def _job_mix(rng: np.random.Generator, n: int, weighted: bool):
+    """2-4 jobs across both families.  Weighted graphs exclude the
+    stochastic plus-times algorithms (PageRank/PPR need row sums <= 1,
+    which out-degree normalization only gives for unit weights); Katz with
+    a small alpha stays contractive either way."""
+    pool = [
+        lambda: Katz(alpha=0.02),
+        lambda: SSSP(source=int(rng.integers(n))),
+        lambda: BFS(source=int(rng.integers(n))),
+    ]
+    if not weighted:
+        pool += [
+            lambda: PageRank(damping=float(rng.uniform(0.6, 0.9))),
+            lambda: PersonalizedPageRank(source=int(rng.integers(n))),
+        ]
+    k = int(rng.integers(2, 5))
+    return [pool[int(rng.integers(len(pool)))]() for _ in range(k)]
+
+
+def _run_all(csr, algs, policy, seed):
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=seed)
+    handles = [sess.submit(a) for a in algs]
+    m = sess.run(policy, 50000)
+    assert m.converged, (policy.name, algs)
+    return sess, [sess.result(h) for h in handles]
+
+
+def _assert_same_fixpoint(alg, got, want):
+    if alg.semiring == MIN_PLUS:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([24, 40, 56]),
+       deg=st.integers(1, 4), weighted=st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_all_policies_reach_the_same_per_job_fixpoint(seed, n, deg,
+                                                      weighted):
+    csr = _random_csr(seed, n, deg, weighted)
+    algs = _job_mix(np.random.default_rng(seed + 1), n, weighted)
+    _, ref = _run_all(csr, algs, TwoLevel(), seed=seed % 97)
+    for policy in (Fused(), Independent(), AllBlocks()):
+        _, got = _run_all(csr, algs, policy, seed=seed % 97)
+        for alg, g, w in zip(algs, got, ref):
+            _assert_same_fixpoint(alg, g, w)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([24, 40]),
+       deg=st.integers(1, 3), steps=st.integers(1, 12))
+@settings(max_examples=8, deadline=None)
+def test_detach_resubmit_mid_run_never_perturbs_survivors(seed, n, deg,
+                                                          steps):
+    """Detach one job mid-run and admit a NEW one into the freed capacity:
+    every surviving job still reaches its reference fixpoint."""
+    csr = _random_csr(seed, n, deg, weighted=False)
+    rng = np.random.default_rng(seed + 2)
+    algs = _job_mix(rng, n, weighted=False)
+    newcomer = SSSP(source=int(rng.integers(n)))
+    _, ref = _run_all(csr, algs, TwoLevel(), seed=seed % 89)
+    _, ref_new = _run_all(csr, [newcomer], TwoLevel(), seed=seed % 89)
+
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=seed % 89)
+    handles = [sess.submit(a) for a in algs]
+    sess.run(TwoLevel(), max_supersteps=steps)
+    sess.detach(handles[0])                     # leaves mid-run
+    h_new = sess.submit(newcomer)               # arrives mid-run
+    assert sess.run(TwoLevel(), 50000).converged
+    for alg, h, w in zip(algs[1:], handles[1:], ref[1:]):
+        _assert_same_fixpoint(alg, sess.result(h), w)
+    _assert_same_fixpoint(newcomer, sess.result(h_new), ref_new[0])
+    with pytest.raises(KeyError):
+        sess.result(handles[0])

@@ -158,3 +158,69 @@ def test_do_score_statistical_agreement_with_cbp():
         total += 1
         agree += int(want == got)
     assert agree / total > 0.85, agree / total
+
+
+# --- metrics honesty ----------------------------------------------------------
+
+def test_synthesize_never_exceeds_queue_budget():
+    """tile_loads is charged as len(gq): the synthesis boundary must never
+    hand back more blocks than the staged queue holds (asserted inside
+    synthesize, pinned here with adversarially long/overlapping queues)."""
+    from repro.core import TwoLevelScheduler
+    rng = np.random.default_rng(0)
+    sched = TwoLevelScheduler(num_blocks=64, q=7, alpha=0.8)
+    for _ in range(25):
+        n_jobs = int(rng.integers(1, 12))
+        queues = [rng.permutation(64)[:rng.integers(0, 64)]
+                  for _ in range(n_jobs)]
+        gq = sched.synthesize(queues)
+        assert len(gq) <= 7
+        assert len(set(gq.tolist())) == len(gq)
+
+
+def test_two_level_select_counts_only_the_staged_prefix():
+    """The Selection must charge exactly the staged blocks: tile_loads ==
+    number of valid queue slots <= q, and a (job, block) push event needs
+    the job unconverged on a STAGED block."""
+    from repro.algorithms import PageRank, SSSP
+    from repro.core import GraphSession, TwoLevel
+    from repro.graph import rmat_graph
+
+    sess = GraphSession(rmat_graph(200, 5, seed=2), 16, capacity=2, seed=0)
+    sess.submit(PageRank())
+    sess.submit(SSSP(source=0))
+    groups = sess.view_groups()
+    node_un, p_mean, active = [], [], []
+    for g in groups:
+        nu, pm = map(np.asarray, sess._pairs_fn(g)(g.values, g.deltas))
+        node_un.append(nu)
+        p_mean.append(pm)
+        active.append(np.asarray(
+            sess._counts_fn(g)(g.values, g.deltas)) > 0)
+    selection = TwoLevel().select(sess, node_un, p_mean, active)
+    assert selection.sel.shape == (sess.q,)
+    assert selection.tile_loads == int(selection.msk.sum()) <= sess.q
+    staged = selection.sel[selection.msk > 0]
+    expect = sum(int((nu[:, staged] > 0).sum()) for nu in node_un)
+    assert selection.job_block_pushes == expect
+
+
+def test_two_level_and_fused_metrics_agree_on_saturated_queue():
+    """On a workload whose hot set always fits the queue (q == B_N), the
+    host TwoLevel and the device Fused scheduler stage exactly the same
+    blocks each superstep, so tile_loads / job_block_pushes / supersteps
+    must agree EXACTLY — pinning that both report the same definition of a
+    staging and of a (job, block) processing event.  Min-plus jobs make the
+    trajectory bit-reproducible (min is exact in any evaluation order)."""
+    from repro.algorithms import SSSP
+    from repro.core import ConcurrentEngine, make_run
+    from repro.graph import uniform_graph
+
+    csr = uniform_graph(48, 3, seed=4, weighted=True, w_max=5.0)
+    algs = [SSSP(source=0), SSSP(source=17)]
+    m_t = ConcurrentEngine(make_run(algs, csr, 16), seed=0).run_two_level(20000)
+    m_f = ConcurrentEngine(make_run(algs, csr, 16), seed=0).run_fused(20000)
+    assert m_t.converged and m_f.converged
+    assert m_t.supersteps == m_f.supersteps
+    assert m_t.tile_loads == m_f.tile_loads
+    assert m_t.job_block_pushes == m_f.job_block_pushes

@@ -8,7 +8,11 @@ Covers the api_redesign acceptance criteria:
     it (stale handles are rejected);
   * the legacy ConcurrentEngine shim stays bit-identical to a direct
     GraphSession drive (the existing convergence suite pins the shim's
-    fixpoints themselves).
+    fixpoints themselves);
+  * HETEROGENEOUS sessions: mixed-semiring jobs (plus-times + min-plus)
+    share one session and one staging per selected block — each job still
+    reaches its solo-session fixpoint (exact for min-plus), tile loads sit
+    below the per-family split, and mesh sharding composes per view.
 """
 
 import os
@@ -18,7 +22,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.algorithms import PageRank, PersonalizedPageRank, SSSP
+from repro.algorithms import Katz, PageRank, PersonalizedPageRank, SSSP
 from repro.core import (AllBlocks, ConcurrentEngine, Fused, GraphSession,
                         Independent, TwoLevel, make_run)
 from repro.graph import rmat_graph, uniform_graph
@@ -117,11 +121,149 @@ def test_capacity_growth_preserves_running_jobs():
         np.testing.assert_allclose(sess.result(h), r, rtol=1e-3, atol=1e-5)
 
 
-def test_mixed_view_submission_rejected():
-    sess = GraphSession(CSR_W, 32, seed=0)
-    sess.submit(SSSP(source=0))
-    with pytest.raises(ValueError):
-        sess.submit(PageRank())                 # different graph view
+# -- heterogeneous sessions: mixed-semiring jobs over one shared CSR --------
+# (replaces test_mixed_view_submission_rejected: mixed graph views are now
+# the point — each view is built lazily and block-aligned, and one staging
+# of a selected block serves both semiring pushes)
+
+
+def _solo(alg, policy, seed=5):
+    s = GraphSession(CSR, 32, capacity=1, seed=seed)
+    h = s.submit(alg)
+    m = s.run(policy, 20000)
+    assert m.converged
+    return s.result(h), m
+
+
+@pytest.mark.parametrize("policy_cls", [TwoLevel, Fused],
+                         ids=["two_level", "fused"])
+def test_heterogeneous_session_matches_solo_fixpoints(policy_cls):
+    """{PageRank, SSSP} in ONE session: the min-plus job's fixpoint is
+    schedule-invariant (exact), the plus-times job converges to its solo
+    fixpoint within tolerance."""
+    pr_ref, _ = _solo(PageRank(), policy_cls())
+    ss_ref, _ = _solo(SSSP(source=0), policy_cls())
+    sess = GraphSession(CSR, 32, capacity=2, seed=5)
+    h_pr = sess.submit(PageRank())
+    h_ss = sess.submit(SSSP(source=0))
+    assert len(sess.groups) == 2            # two block-aligned graph views
+    m = sess.run(policy_cls(), 20000)
+    assert m.converged
+    np.testing.assert_array_equal(sess.result(h_ss), ss_ref)
+    np.testing.assert_allclose(sess.result(h_pr), pr_ref,
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_heterogeneous_shared_staging_beats_split_sessions():
+    """The cross-family CAJS claim: one staging per selected block serves
+    BOTH families, so hetero tile loads < the per-family sessions' sum."""
+    sess = GraphSession(CSR, 32, capacity=2, seed=5)
+    h = [sess.submit(a) for a in
+         (PageRank(), SSSP(source=0), PersonalizedPageRank(source=7),
+          SSSP(source=17))]
+    m = sess.run(TwoLevel(), 20000)
+    assert m.converged
+    split = 0
+    for fam in ([PageRank(), PersonalizedPageRank(source=7)],
+                [SSSP(source=0), SSSP(source=17)]):
+        s = GraphSession(CSR, 32, capacity=2, seed=5)
+        for a in fam:
+            s.submit(a)
+        mf = s.run(TwoLevel(), 20000)
+        assert mf.converged
+        split += mf.tile_loads
+    assert m.tile_loads < split
+    assert all(sess.converged(hh) for hh in h)
+
+
+def test_heterogeneous_mid_run_submit_detach_and_slot_independence():
+    """Arrival of a DIFFERENT family mid-run; per-view slots may collide
+    numerically (they are distinct handles); detach+resubmit in one view
+    never perturbs the other view's survivors."""
+    ss_ref, _ = _solo(SSSP(source=0), TwoLevel(), seed=2)
+    sess = GraphSession(CSR, 32, capacity=1, seed=2)
+    h_pr = sess.submit(PageRank())
+    sess.run(TwoLevel(), max_supersteps=5)
+    h_ss = sess.submit(SSSP(source=0))          # new view arrives mid-run
+    assert h_pr.slot == h_ss.slot == 0          # per-view axes
+    assert sess.job_index(h_pr) != sess.job_index(h_ss)
+    assert sess.run(TwoLevel(), 20000).converged
+    np.testing.assert_array_equal(sess.result(h_ss), ss_ref)
+    res_pr = sess.detach(h_pr)                  # frees only the PT slot
+    assert sess.num_active == 1
+    h_katz = sess.submit(Katz())                # third view, new group
+    assert len(sess.groups) == 3
+    assert sess.run(TwoLevel(), 20000).converged
+    with pytest.raises(KeyError):
+        sess.result(h_pr)
+    np.testing.assert_array_equal(sess.result(h_ss), ss_ref)  # untouched
+    katz_ref, _ = _solo(Katz(), TwoLevel(), seed=2)
+    np.testing.assert_allclose(sess.result(h_katz), katz_ref,
+                               rtol=1e-3, atol=1e-5)
+    assert res_pr.shape == (CSR.n,)
+
+
+def test_heterogeneous_unconverged_counts_layout():
+    sess = GraphSession(CSR, 32, capacity=2, seed=0)
+    h_pr = sess.submit(PageRank())
+    h_ss = sess.submit(SSSP(source=0))
+    counts = sess.unconverged_counts()
+    assert counts.shape == (sess.total_capacity,) == (4,)
+    assert counts[sess.job_index(h_pr)] > 0
+    assert counts[sess.job_index(h_ss)] > 0     # the source vertex pends
+    sess.run(TwoLevel(), 20000)
+    assert (sess.unconverged_counts() == 0).all()
+
+
+HETERO_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import PageRank, PersonalizedPageRank, SSSP, BFS
+from repro.core import GraphSession, TwoLevel, Fused
+from repro.dist.graph import make_job_mesh
+from repro.graph import rmat_graph
+
+assert len(jax.devices()) == 4
+csr = rmat_graph(200, 5, seed=13)
+algs = [PageRank(), PersonalizedPageRank(source=11),
+        SSSP(source=0), SSSP(source=42)]
+
+for policy, tag in ((TwoLevel(), "TWO-LEVEL"), (Fused(), "FUSED")):
+    ref = GraphSession(csr, 16, capacity=4, seed=5)
+    rh = [ref.submit(a) for a in algs]
+    assert ref.run(policy, 20000).converged
+
+    mesh = make_job_mesh(4)
+    sess = GraphSession(csr, 16, capacity=4, seed=5)
+    h = [sess.submit(a) for a in algs[:2]]
+    sess.run(policy, max_supersteps=4, mesh=mesh)   # MP family arrives later
+    h += [sess.submit(a) for a in algs[2:]]
+    m = sess.run(policy, 20000, mesh=mesh)
+    assert m.converged
+    for g in sess.view_groups():                    # every view sharded
+        assert g.values.sharding.spec[0] == "jobs", g.values.sharding
+    for hh, rr in zip(h, rh):
+        if hh.alg.semiring == "min_plus":           # schedule-invariant
+            np.testing.assert_array_equal(sess.result(hh), ref.result(rr))
+        else:
+            np.testing.assert_allclose(sess.result(hh), ref.result(rr),
+                                       rtol=1e-3, atol=1e-5)
+    print(tag + "-HETERO-MESH-OK")
+"""
+
+
+def test_heterogeneous_session_mesh_matches_unsharded():
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    pythonpath = src + os.pathsep + os.environ.get("PYTHONPATH", "")
+    result = subprocess.run(
+        [sys.executable, "-c", HETERO_MESH_SCRIPT],
+        capture_output=True, text=True, timeout=480,
+        env={**os.environ, "PYTHONPATH": pythonpath.rstrip(os.pathsep)})
+    for marker in ("TWO-LEVEL-HETERO-MESH-OK", "FUSED-HETERO-MESH-OK"):
+        assert marker in result.stdout, result.stderr[-2000:]
 
 
 @pytest.mark.parametrize("policy", [Independent(), AllBlocks()],
