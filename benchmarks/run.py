@@ -29,12 +29,23 @@
                              two per-family sessions.  Under TwoLevel and
                              Fused; adds a jobs-mesh variant when several
                              devices are visible.
+  fig_sync                 : host-sync amortization of the device-resident
+                             scheduler — TwoLevel(backend="device") sweeps
+                             steps_per_sync in {1, 2, 8, inf}; the schedule
+                             (supersteps, tile_loads) is invariant while
+                             host round-trips drop ~K-fold.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modes are selectable:
-``python benchmarks/run.py [mode ...]`` (default: all).
+``python benchmarks/run.py [mode ...]`` (default: all).  ``--json DIR``
+additionally writes each mode's rows as machine-readable records to
+``DIR/BENCH_<mode>.json`` (field names parsed from the derived column),
+so CI can archive the perf trajectory.
 """
 
 import argparse
+import json
+import math
+import os
 import time
 
 import numpy as np
@@ -46,11 +57,31 @@ from repro.core.priority import cbp_key_sort
 from repro.graph import rmat_graph, uniform_graph
 
 ROWS = []
+RECORDS = {}          # mode -> [ {name, us_per_call, **derived fields} ]
+_CURRENT_MODE = None  # set by main() around each mode call
+
+
+def _maybe_num(v: str):
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            f = float(v)
+        except ValueError:
+            return v
+        # "inf"/"nan" stay strings: json.dump's Infinity is not valid JSON
+        return f if math.isfinite(f) else v
 
 
 def row(name: str, us: float, derived: str):
     ROWS.append(f"{name},{us:.1f},{derived}")
     print(ROWS[-1], flush=True)
+    rec = {"name": name, "us_per_call": round(us, 1)}
+    for kv in derived.split(";"):
+        if "=" in kv:
+            k, v = kv.split("=", 1)
+            rec[k] = _maybe_num(v)
+    RECORDS.setdefault(_CURRENT_MODE, []).append(rec)
 
 
 def _jobs(n):
@@ -288,6 +319,39 @@ def fig_hetero():
                 f"saving={s_loads / max(h_loads, 1):.2f}x;target=1.5x")
 
 
+def fig_sync():
+    """Host-sync amortization (device-resident two-level scheduling): the
+    SAME schedule — identical per-step sampling keys fold_in(seed, step),
+    so identical supersteps and tile_loads — at every sync cadence, while
+    host round-trips drop ~K-fold.  steps_per_sync=inf is `Fused`: one
+    while_loop, one sync."""
+    from repro.core import GraphSession, TwoLevel
+
+    csr = rmat_graph(1200, 8, seed=8)
+    algs = _jobs(8)
+    base = None
+    for k in (1, 2, 8, math.inf):
+        sess = GraphSession(csr, 64, capacity=len(algs), seed=0)
+        for alg in algs:
+            sess.submit(alg)
+        t0 = time.time()
+        m = sess.run(TwoLevel(backend="device", steps_per_sync=k), 50000)
+        dt = time.time() - t0
+        assert m.converged
+        if base is None:
+            base = m
+        else:   # the acceptance invariant: amortization changes NO staging
+            assert m.tile_loads == base.tile_loads, (m.tile_loads,
+                                                     base.tile_loads)
+            assert m.supersteps == base.supersteps
+        tag = "inf" if k == math.inf else str(k)
+        row(f"fig_sync_k{tag}", dt * 1e6 / max(m.supersteps, 1),
+            f"steps_per_sync={tag};host_syncs={m.host_syncs};"
+            f"supersteps={m.supersteps};tile_loads={m.tile_loads};"
+            f"wall_s={dt:.3f};"
+            f"sync_reduction={base.host_syncs / max(m.host_syncs, 1):.2f}x")
+
+
 MODES = {
     "fig4_5_memory_redundancy": fig4_5_memory_redundancy,
     "fig_convergence": fig_convergence,
@@ -297,21 +361,33 @@ MODES = {
     "fig_scaling": fig_scaling,
     "fig_arrival": fig_arrival,
     "fig_hetero": fig_hetero,
+    "fig_sync": fig_sync,
 }
 
 
 def main(argv=None) -> None:
+    global _CURRENT_MODE
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help=f"benchmark modes to run (default: all) "
                          f"from: {', '.join(MODES)}")
+    ap.add_argument("--json", metavar="DIR", default=None,
+                    help="write per-mode records to DIR/BENCH_<mode>.json")
     args = ap.parse_args(argv)
     unknown = [m for m in args.modes if m not in MODES]
     if unknown:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(MODES)}")
     print("name,us_per_call,derived")
     for name in (args.modes or MODES):
+        _CURRENT_MODE = name
         MODES[name]()
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
+        for name, records in RECORDS.items():
+            path = os.path.join(args.json, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"mode": name, "records": records}, f, indent=1)
+            print(f"wrote {path}")
     print(f"\n{len(ROWS)} benchmark rows OK")
 
 

@@ -10,9 +10,13 @@ Public surface (see docs/API.md for the migration guide):
   ConcurrentEngine / make_run   - legacy fixed-job-set shim (kept working)
 """
 
-from repro.core.priority import block_pairs, cbp, do_score, EPS_FACTOR
-from repro.core.do_select import do_select, DEFAULT_SAMPLES
-from repro.core.global_q import global_queue, DEFAULT_ALPHA
+from repro.core.priority import (block_pairs, cbp, counts_from_pairs,
+                                 do_score, EPS_FACTOR)
+from repro.core.do_select import do_select, do_select_device, DEFAULT_SAMPLES
+from repro.core.global_q import (global_queue, global_queue_device,
+                                 accumulate_priority, priority_topq,
+                                 synthesize_topq, reserved_slots,
+                                 DEFAULT_ALPHA)
 from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
                                   PRITER_C)
 from repro.core.push import push_plus_one, push_min_one, compute_pairs
@@ -25,9 +29,10 @@ from repro.core.api import (initPtable, De_In_Priority, De_Gl_Priority,
                             Con_processing)
 
 __all__ = [
-    "block_pairs", "cbp", "do_score", "EPS_FACTOR",
-    "do_select", "DEFAULT_SAMPLES",
-    "global_queue", "DEFAULT_ALPHA",
+    "block_pairs", "cbp", "counts_from_pairs", "do_score", "EPS_FACTOR",
+    "do_select", "do_select_device", "DEFAULT_SAMPLES",
+    "global_queue", "global_queue_device", "accumulate_priority",
+    "priority_topq", "synthesize_topq", "reserved_slots", "DEFAULT_ALPHA",
     "TwoLevelScheduler", "optimal_queue_length", "PRITER_C",
     "push_plus_one", "push_min_one", "compute_pairs",
     "RunMetrics", "Selection", "SchedulePolicy",

@@ -4,13 +4,26 @@ Paper §4.2.2: instead of sorting all B_N blocks (O(B_N log B_N)), sample s
 (default 500) pairs, sort the sample, estimate the q-th priority threshold as
 the (q*s/B_N)-th sample, then one O(B_N) pass collects blocks above the
 threshold; only those ~q blocks are sorted.  Total O(B_N) + O(q log q).
+
+Two implementations share the structure:
+
+  do_select        - host, numpy, exact CBP comparator (Function 1) —
+                     the faithful transcription;
+  do_select_device - jittable jnp analogue for the device-resident
+                     scheduler: uniform sampling without replacement via
+                     Gumbel top-k, the same cut-index threshold estimate,
+                     ranking by the scalar `do_score` CBP surrogate.
+                     Distributionally matches the host sampler (pinned by
+                     tests/test_device_scheduler.py's frequency suite).
 """
 
 from __future__ import annotations
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.core.priority import cbp, cbp_key_sort
+from repro.core.priority import cbp, cbp_key_sort, do_score
 
 DEFAULT_SAMPLES = 500  # paper default
 
@@ -47,3 +60,50 @@ def do_select(node_un: np.ndarray, p_mean: np.ndarray, q: int,
     picked = np.asarray(picked, dtype=np.int64)
     order = cbp_key_sort(node_un[picked], p_mean[picked])
     return picked[order][:q]
+
+
+def do_select_device(node_un: jnp.ndarray, p_mean: jnp.ndarray, q: int,
+                     key: jax.Array, s: int = DEFAULT_SAMPLES):
+    """Device Function 2 for ONE job: fixed-shape (sel [q], msk [q]).
+
+    Mirrors `do_select` step for step so the two are distributionally
+    interchangeable:
+      * s live blocks are sampled uniformly without replacement (Gumbel
+        top-k over uniform logits restricted to live blocks == the host's
+        `rng.choice(live, s, replace=False)`);
+      * the q-th priority threshold is estimated as the (q*s_eff/B_N)-th
+        highest-scoring sample (same cut index as the host);
+      * blocks at or above the threshold are ranked by `do_score`, the
+        scalar CBP surrogate (the host ranks by the exact comparator).
+    Converged blocks never enter the queue; when fewer than q blocks are
+    live the queue is the whole live set, no sampling (also as the host).
+    `msk` marks valid slots; invalid slots alias block 0 and must be
+    masked by consumers (the push primitives already do).
+    """
+    b_n = node_un.shape[-1]
+    k = min(q, b_n)
+    score = do_score(node_un, p_mean)                  # -inf when converged
+    live = node_un > 0
+    n_live = jnp.sum(live.astype(jnp.int32))
+
+    # uniform sample of s_eff live blocks, without replacement
+    s_cap = max(1, min(int(s), b_n))
+    gumbel = jnp.where(live, jax.random.gumbel(key, (b_n,)), -jnp.inf)
+    _, samp_idx = jax.lax.top_k(gumbel, s_cap)
+    s_eff = jnp.minimum(jnp.int32(s_cap), n_live)
+    samp_scores = jnp.where(jnp.arange(s_cap) < s_eff,
+                            score[samp_idx], -jnp.inf)
+    samp_sorted = -jnp.sort(-samp_scores)              # descending
+
+    # lower bound of the top-q priority estimated from the sample
+    cut = jnp.clip((q * s_eff) // b_n, 0, jnp.maximum(s_eff - 1, 0))
+    thresh = samp_sorted[cut]
+    eligible = jnp.where(n_live <= k, live, live & (score >= thresh))
+
+    topv, topi = jax.lax.top_k(jnp.where(eligible, score, -jnp.inf), k)
+    msk = jnp.isfinite(topv).astype(jnp.float32)
+    sel = jnp.where(msk > 0, topi, 0).astype(jnp.int32)
+    if k < q:   # q beyond B_N: pad to the fixed [q] layout
+        sel = jnp.pad(sel, (0, q - k))
+        msk = jnp.pad(msk, (0, q - k))
+    return sel, msk

@@ -18,6 +18,7 @@ redundancy, measurable.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Sequence
 
 import numpy as np
@@ -147,13 +148,19 @@ class ConcurrentEngine:
         return m
 
     def run_two_level(self, max_supersteps: int = 100000, *,
-                      mesh=None) -> RunMetrics:
-        """The paper's schedule: MPDS (host DO + global queue) + CAJS push.
+                      mesh=None, backend: str = "host",
+                      steps_per_sync=1) -> RunMetrics:
+        """The paper's schedule: MPDS (DO queues + global queue) + CAJS push.
 
         mesh: optional jax.sharding.Mesh (e.g. dist.graph.make_job_mesh());
         J jobs are sharded across its devices, each device staging selected
-        blocks once for its local jobs (per-device CAJS)."""
-        return self._drive(TwoLevel(), max_supersteps, mesh)
+        blocks once for its local jobs (per-device CAJS).
+        backend="device" moves both scheduling levels into one jitted
+        superstep; steps_per_sync then sets how many supersteps run per
+        host round-trip (see docs/API.md, "Scheduler backends")."""
+        return self._drive(
+            TwoLevel(backend=backend, steps_per_sync=steps_per_sync),
+            max_supersteps, mesh)
 
     def run_independent(self, max_supersteps: int = 100000) -> RunMetrics:
         """Per-job queues processed separately (paper Fig. 3 'current mode')."""
@@ -164,13 +171,16 @@ class ConcurrentEngine:
         return self._drive(AllBlocks(), max_supersteps)
 
     def run_fused(self, max_supersteps: int = 100000, *,
-                  mesh=None) -> RunMetrics:
-        """Beyond-paper: entire two-level loop in one on-device while_loop.
+                  mesh=None, steps_per_sync=None) -> RunMetrics:
+        """Beyond-paper: entire two-level loop in one on-device while_loop
+        (`Fused` is TwoLevel(backend="device", steps_per_sync=inf)).
 
         mesh: optional Mesh; shards the job axis as in run_two_level.  The
         whole while_loop then runs SPMD with job state partitioned and one
-        scalar all-reduce per superstep for the convergence test."""
-        return self._drive(Fused(), max_supersteps, mesh)
+        scalar all-reduce per superstep for the convergence test.  A finite
+        steps_per_sync instead returns to host every K supersteps."""
+        k = math.inf if steps_per_sync is None else steps_per_sync
+        return self._drive(Fused(steps_per_sync=k), max_supersteps, mesh)
 
     # -- results ---------------------------------------------------------------
 

@@ -5,15 +5,36 @@ head to tail.  Cumulative Pri per block orders the global queue; the top
 alpha*q blocks are taken by cumulative weight, and the remaining (1-alpha)*q
 slots are reserved for blocks that top *individual* queues but miss the
 global cut (round-robin over jobs, head-first).
+
+Two implementations:
+
+  global_queue          - host, numpy, list-of-queues in / ids out — the
+                          faithful transcription (exact round-robin reserve);
+  global_queue_device / - jittable jnp analogue over fixed-shape [J, q]
+  accumulate_priority     queues: the same weighted scatter-add, then a
+                          quota-respecting fill — ceil(alpha*q) slots go
+                          strictly by cumulative weight, the (1-alpha)q
+                          reserved slots go to the best not-yet-selected
+                          job HEADS, and reserve slots no head claims fall
+                          back to the next-best weighted blocks (the host
+                          fills those from deeper queue depths; the sets
+                          coincide whenever depth order and weight order
+                          agree).  Unlike a naive head boost, many jobs
+                          can never crowd the weighted slots out.
+                          Agreement on the reserved-head-slot edge cases
+                          is pinned by tests/test_device_scheduler.py.
 """
 
 from __future__ import annotations
 
-from typing import List, Sequence
+import math
+from typing import List, Sequence, Tuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-DEFAULT_ALPHA = 0.8  # paper default
+DEFAULT_ALPHA = 0.8   # paper default
 
 
 def global_queue(job_queues: Sequence[np.ndarray], num_blocks: int, q: int,
@@ -57,3 +78,90 @@ def global_queue(job_queues: Sequence[np.ndarray], num_blocks: int, q: int,
         if not added and depth > max((len(jq) for jq in job_queues), default=0):
             break
     return np.asarray(queue, dtype=np.int64)
+
+
+# --------------------------------------------------------------------------
+# device synthesis: fixed-shape [J, q] queues -> dense priority -> top-q
+# --------------------------------------------------------------------------
+
+
+def reserved_slots(q: int, alpha: float = DEFAULT_ALPHA) -> int:
+    """(1-alpha)q slots reserved for individual queue heads (Fig. 7).
+
+    Mirrors the host cut exactly: the weighted tier keeps at least ONE
+    slot (host: n_global = max(1, ceil(alpha*q))), so even alpha=0 never
+    hands the whole queue to heads."""
+    q = max(1, q)
+    return max(0, q - max(1, int(math.ceil(alpha * q))))
+
+
+def accumulate_priority(pri: jnp.ndarray, heads: jnp.ndarray,
+                        sel: jnp.ndarray, msk: jnp.ndarray,
+                        q: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter-add one batch of job queues into (pri, head-mask).
+
+    sel/msk are [J, q] (fixed-shape DO queues, msk marks valid slots); head
+    slots get Pri = q down to 1 at the tail, exactly the host weighting;
+    `heads` ([B_N] bool) collects which blocks top an individual queue —
+    the candidates for the reserved slots in `synthesize_topq`.  Call once
+    per view group, accumulating into one (pri, heads), to synthesize
+    across heterogeneous job groups."""
+    w = jnp.arange(q, 0, -1, dtype=jnp.float32)[None, :] * msk
+    pri = pri.at[sel.reshape(-1)].add(w.reshape(-1))
+    heads = heads.at[sel[:, 0]].max(msk[:, 0] > 0)
+    return pri, heads
+
+
+def priority_topq(pri: jnp.ndarray, q: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense cumulative priority -> (gsel [q] int32, gmsk [q] float32)."""
+    k = min(q, pri.shape[-1])
+    gv, gsel = jax.lax.top_k(pri, k)
+    gmsk = (gv > 0.0).astype(jnp.float32)
+    gsel = jnp.where(gmsk > 0, gsel, 0).astype(jnp.int32)
+    if k < q:
+        gsel = jnp.pad(gsel, (0, q - k))
+        gmsk = jnp.pad(gmsk, (0, q - k))
+    return gsel, gmsk
+
+
+def synthesize_topq(pri: jnp.ndarray, heads: jnp.ndarray, q: int,
+                    alpha: float = DEFAULT_ALPHA
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fig. 7's two-tier cut over a dense priority, fixed [q] output.
+
+    ceil(alpha*q) slots go by cumulative weight alone (the host
+    guarantee: no number of competing heads can displace them); the
+    (1-alpha)q reserved slots take the highest-priority not-yet-selected
+    HEADS; reserve slots no head claims fall back to the next-best
+    weighted blocks, so a saturated candidate set fills the queue exactly
+    as the host's round-robin does."""
+    n_res = reserved_slots(q, alpha)
+    if n_res == 0:
+        return priority_topq(pri, q)
+    bn = pri.shape[-1]
+    s1, m1 = priority_topq(pri, q - n_res)            # weighted slots
+    taken = jnp.zeros((bn,), jnp.bool_).at[s1].max(m1 > 0)
+    s2, m2 = priority_topq(                           # reserved: best heads
+        jnp.where(heads & ~taken, pri, 0.0), n_res)
+    taken = taken.at[s2].max(m2 > 0)
+    s3, m3 = priority_topq(jnp.where(taken, 0.0, pri), n_res)
+    m3 = m3 * (jnp.arange(n_res) < (n_res - jnp.sum(m2)))   # spare quota
+    cand = jnp.concatenate([s1, s2, s3])
+    cmsk = jnp.concatenate([m1, m2, m3])
+    order = jnp.argsort(cmsk <= 0, stable=True)[:q]   # valid first, in order
+    return cand[order].astype(jnp.int32), cmsk[order]
+
+
+def global_queue_device(job_sel: jnp.ndarray, job_msk: jnp.ndarray,
+                        num_blocks: int, q: int,
+                        alpha: float = DEFAULT_ALPHA
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Jittable De_Gl_Priority over fixed-shape [J, q] DO queues.
+
+    Returns (gsel [q] int32, gmsk [q] float32): the same blocks the host
+    `global_queue` selects whenever the candidate set fits the queue, and
+    the cumulative-weight top with reserved per-job heads otherwise."""
+    pri, heads = accumulate_priority(
+        jnp.zeros((num_blocks,), jnp.float32),
+        jnp.zeros((num_blocks,), jnp.bool_), job_sel, job_msk, q)
+    return synthesize_topq(pri, heads, q, alpha)

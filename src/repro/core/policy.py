@@ -1,20 +1,43 @@
 """Pluggable schedule policies over a GraphSession.
 
-One `step()/run()` driver replaces the four historical near-duplicate
-engine loops.  A policy decides, per superstep, WHICH blocks are staged and
-WHO processes them; the driver owns everything else (convergence test,
-metrics, the push dispatch).  All policies reach the same per-job fixpoint
-— they differ only in schedule and therefore in tile_loads / supersteps:
+One driver pair replaces the four historical near-duplicate engine loops.
+A policy decides, per superstep, WHICH blocks are staged and WHO processes
+them; the driver owns everything else (convergence test, metrics, the push
+dispatch).  All policies reach the same per-job fixpoint — they differ
+only in schedule and therefore in tile_loads / supersteps:
 
   TwoLevel    - the paper: per-job DO queues -> global queue -> one staging
                 of each selected block serves ALL jobs (CAJS + MPDS).
-                Scheduling on host (faithful Job Controller), push on device.
-  Fused       - beyond-paper: the entire loop (priority pairs, top-q, global
-                accumulation, push, convergence test) is a single
-                lax.while_loop on device; no host round-trips.
   Independent - redundancy baseline: each job selects and stages its own
                 queue (paper Fig. 3 "current mode").
   AllBlocks   - non-prioritized baseline: every block, every superstep.
+  Fused       - alias for TwoLevel(backend="device", steps_per_sync=inf):
+                the entire loop in one on-device while_loop.
+
+Every policy runs on either BACKEND:
+
+  backend="host"   - the faithful Job Controller: scheduling on host
+                     (numpy + exact CBP), push on device; one scheduling
+                     sync per superstep.
+  backend="device" - both scheduling levels execute inside ONE jitted
+                     superstep (device do_select sampling via jax.random
+                     with the seed threaded through fold_in(step), global
+                     synthesis as a weighted scatter-add with reserved
+                     head slots), fused with the push into a single
+                     dispatch.  `steps_per_sync=K` lax.scan's K supersteps
+                     per host round-trip (convergence is still detected
+                     exactly: a scanned step no-ops once all jobs
+                     converge); `steps_per_sync=math.inf` turns the scan
+                     into a lax.while_loop that only returns at the
+                     fixpoint.  Compiled steps are cached on the session
+                     (`session._device_step_fn`), keyed on view keys /
+                     capacities / q / alpha / steps_per_sync, so repeated
+                     run() calls and resubmissions never re-trace.
+
+`RunMetrics.host_syncs` counts scheduling round-trips (host backend: one
+per superstep including the final all-converged poll; device backend: one
+per scan chunk / while_loop return) — the quantity `steps_per_sync`
+amortizes, swept by `benchmarks/run.py fig_sync`.
 
 Sessions are HETEROGENEOUS (repro.core.session): jobs live in per-graph-
 view groups, but block ids are view-agnostic (every view is block-aligned
@@ -44,7 +67,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import priority as prio
-from repro.core.push import compute_pairs
+from repro.core.do_select import do_select_device
+from repro.core.global_q import accumulate_priority, synthesize_topq
+from repro.core.push import compute_pairs, indep_push_fn, shared_push_fn
+
+HOST, DEVICE = "host", "device"
 
 
 @dataclasses.dataclass
@@ -52,18 +79,23 @@ class RunMetrics:
     supersteps: int = 0
     tile_loads: int = 0            # adjacency-block stagings (HBM->VMEM)
     job_block_pushes: int = 0      # (job, block) processing events
+    host_syncs: int = 0            # scheduling host<->device round-trips
     iterations_per_job: Optional[np.ndarray] = None
     converged: bool = False
 
 
 @dataclasses.dataclass
 class Selection:
-    """One superstep's staging decision, produced by a host policy.
+    """One superstep's staging decision.
 
     shared=True: `sel`/`msk` are [q] — ONE staging of each selected block
     serves every job in every view group (CAJS; tile_loads counted once).
     shared=False: `sel`/`msk` are per-group lists of [J_g, q] — each job
-    stages its own queue (the redundancy baseline)."""
+    stages its own queue (the redundancy baseline).
+
+    Host policies fill it with numpy values; device policies return the
+    same container holding tracers (consumed inside the jitted superstep).
+    """
 
     sel: Union[np.ndarray, List[np.ndarray]]
     msk: Union[np.ndarray, List[np.ndarray]]
@@ -73,92 +105,318 @@ class Selection:
 
 
 class SchedulePolicy:
-    """Base host-driven policy: subclasses implement `select`.
+    """Base policy: subclasses implement `select` (host) / `device_select`.
 
-    `select` receives per-view-group lists (creation order): node_un[g] and
+    Both receive per-view-group lists (creation order): node_un[g] and
     p_mean[g] are [J_g, B_N], active[g] is [J_g] bool."""
 
     name = "abstract"
     needs_pairs = True  # driver computes <Node_un, P_mean> before select()
 
+    def __init__(self, *, backend: str = HOST,
+                 steps_per_sync: Union[int, float] = 1):
+        if backend not in (HOST, DEVICE):
+            raise ValueError(f"backend must be 'host' or 'device': {backend}")
+        if backend == HOST:
+            if steps_per_sync != 1:
+                raise ValueError(
+                    "host scheduling decides every superstep — "
+                    "steps_per_sync requires backend='device'")
+        elif steps_per_sync != math.inf and (
+                steps_per_sync != int(steps_per_sync) or steps_per_sync < 1):
+            raise ValueError(
+                f"steps_per_sync must be a positive int or math.inf: "
+                f"{steps_per_sync}")
+        self.backend = backend
+        self.steps_per_sync = steps_per_sync
+
+    # -- selection hooks -----------------------------------------------------
+
     def select(self, sess, node_un: Optional[Sequence[np.ndarray]],
                p_mean: Optional[Sequence[np.ndarray]],
                active: Sequence[np.ndarray]) -> Optional[Selection]:
-        """Return the staging decision, or None when nothing is schedulable
+        """Host staging decision, or None when nothing is schedulable
         (the driver then declares convergence)."""
         raise NotImplementedError
 
+    def device_select(self, node_uns, p_means, actives, key, *, q: int,
+                      alpha: float, samples: int,
+                      num_blocks: int) -> Selection:
+        """Traced staging decision inside the jitted superstep.  `key` is
+        this superstep's sampling key (already fold_in(step)-derived)."""
+        raise NotImplementedError
+
+    # -- driving -------------------------------------------------------------
+
     def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
-        """Generic host driver: counts -> pairs -> select -> push, across
-        every view group each superstep."""
-        groups = sess.view_groups()
-        offs = np.cumsum([0] + [g.capacity for g in groups])
-        m = RunMetrics(
-            iterations_per_job=np.zeros(int(offs[-1]), dtype=np.int64))
+        if self.backend == DEVICE:
+            return _run_device(self, sess, max_supersteps)
+        return _run_host(self, sess, max_supersteps)
+
+
+# ---------------------------------------------------------------------------
+# host driver: counts fall out of the pairs dispatch; select on host
+# ---------------------------------------------------------------------------
+
+
+def _run_host(policy: SchedulePolicy, sess,
+              max_supersteps: int) -> RunMetrics:
+    """Host driver: pairs -> select -> push, one scheduling sync per
+    superstep.  The convergence counts are derived from the pairs
+    (counts == node_un.sum(-1)), so policies that need pairs cost ONE
+    device dispatch per group per superstep; AllBlocks keeps the cheaper
+    counts-only reduction (needs_pairs=False fast path)."""
+    groups = sess.view_groups()
+    offs = np.cumsum([0] + [g.capacity for g in groups])
+    m = RunMetrics(
+        iterations_per_job=np.zeros(int(offs[-1]), dtype=np.int64))
+    if policy.needs_pairs:
+        pairs_fns = [sess._pairs_fn(g) for g in groups]
+    else:
         counts_fns = [sess._counts_fn(g) for g in groups]
-        pairs_fns = ([sess._pairs_fn(g) for g in groups]
-                     if self.needs_pairs else None)
-        for _ in range(max_supersteps):
-            actives = []
+    # a group observed fully converged stays converged for the rest of this
+    # run (this driver never pushes an inactive group and no job can arrive
+    # mid-run), so its per-superstep dispatch can be skipped outright; the
+    # stand-in zeros are built on first skip only
+    done = [None] * len(groups)
+    bn = sess.scheduler.num_blocks
+
+    def _mark_done(gi):
+        g = groups[gi]
+        done[gi] = (np.zeros(g.capacity, dtype=bool),
+                    np.zeros((g.capacity, bn), np.float32)
+                    if policy.needs_pairs else None)
+
+    for _ in range(max_supersteps):
+        actives = []
+        node_un = p_mean = None
+        if policy.needs_pairs:
+            node_un, p_mean = [], []
             for gi, g in enumerate(groups):
+                if done[gi] is not None:
+                    actives.append(done[gi][0])
+                    node_un.append(done[gi][1])
+                    p_mean.append(done[gi][1])
+                    continue
+                nu, pm = map(np.asarray, pairs_fns[gi](g.values, g.deltas))
+                node_un.append(nu)
+                p_mean.append(pm)
+                actives.append(prio.counts_from_pairs(nu) > 0)
+                if not actives[gi].any():
+                    _mark_done(gi)
+        else:
+            for gi, g in enumerate(groups):
+                if done[gi] is not None:
+                    actives.append(done[gi][0])
+                    continue
                 counts = np.asarray(counts_fns[gi](g.values, g.deltas))
-                act = counts > 0
-                actives.append(act)
-                m.iterations_per_job[offs[gi]:offs[gi + 1]][act] += 1
-            if not any(a.any() for a in actives):
-                m.converged = True
-                break
-            node_un = p_mean = None
-            if self.needs_pairs:
-                node_un, p_mean = [], []
-                for gi, g in enumerate(groups):
-                    if not actives[gi].any():   # no device pass needed:
-                        z = np.zeros((g.capacity,   # converged pairs are 0
-                                      sess.scheduler.num_blocks),
-                                     dtype=np.float32)
-                        node_un.append(z)
-                        p_mean.append(z)
-                        continue
-                    nu, pm = map(np.asarray,
-                                 pairs_fns[gi](g.values, g.deltas))
-                    node_un.append(nu)
-                    p_mean.append(pm)
-            selection = self.select(sess, node_un, p_mean, actives)
-            if selection is None:
-                m.converged = True
-                break
-            # a fully-converged group is never pushed (matches the solo
-            # session, which stops outright; for plus-times this also keeps
-            # sub-tolerance residual mass where convergence left it)
+                actives.append(counts > 0)
+                if not actives[gi].any():
+                    _mark_done(gi)
+        for gi in range(len(groups)):
+            m.iterations_per_job[offs[gi]:offs[gi + 1]][actives[gi]] += 1
+        m.host_syncs += 1
+        if not any(a.any() for a in actives):
+            m.converged = True
+            break
+        selection = policy.select(sess, node_un, p_mean, actives)
+        if selection is None:
+            m.converged = True
+            break
+        # a fully-converged group is never pushed (matches the solo
+        # session, which stops outright; for plus-times this also keeps
+        # sub-tolerance residual mass where convergence left it)
+        if selection.shared:
+            sel = jnp.asarray(selection.sel)
+            msk = jnp.asarray(selection.msk)
+            for gi, g in enumerate(groups):
+                if not actives[gi].any():
+                    continue
+                g.values, g.deltas = sess._push_shared_fn(g)(
+                    g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                    sel, msk, g.push_scale)
+        else:
+            for gi, g in enumerate(groups):
+                if not actives[gi].any():
+                    continue
+                g.values, g.deltas = sess._push_indep_fn(g)(
+                    g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                    jnp.asarray(selection.sel[gi]),
+                    jnp.asarray(selection.msk[gi]), g.push_scale)
+        m.supersteps += 1
+        m.tile_loads += selection.tile_loads
+        m.job_block_pushes += selection.job_block_pushes
+    return m
+
+
+# ---------------------------------------------------------------------------
+# device driver: ONE jitted superstep, K supersteps per host round-trip
+# ---------------------------------------------------------------------------
+
+
+def build_device_step(policy: SchedulePolicy, sess):
+    """Compile the session's superstep for `policy` into one jitted step
+    function.  Returned callable:
+
+        step_fn(state, scales, tiles, nbrs, max_steps, key)
+            -> (state, unconverged_total)
+
+    where state = (it, values_tuple, deltas_tuple, loads, pushes,
+    iters_tuple).  Finite steps_per_sync runs a lax.scan of that many
+    gated supersteps (a step no-ops — and counts nothing — once all jobs
+    converge or the budget is spent); steps_per_sync=inf runs a
+    lax.while_loop to the fixpoint.  Graph tiles / neighbour ids / push
+    scales are ARGUMENTS, not closure constants, so one compilation serves
+    every run() call, resubmission, and mesh placement (jax re-specializes
+    on sharding, not on values).  Cache via session._device_step_fn."""
+    groups = sess.view_groups()
+    n_groups = len(groups)
+    algs = [g.alg for g in groups]
+    q = int(sess.q)
+    alpha = float(sess.alpha)
+    samples = int(sess.samples)
+    bn = int(sess.scheduler.num_blocks)
+    k_sync = policy.steps_per_sync
+    needs_pairs = policy.needs_pairs
+
+    shared_push = [shared_push_fn(g.semiring, g.push_one, sess.use_pallas)
+                   for g in groups]
+    indep_push = [indep_push_fn(g.push_one) for g in groups]
+
+    def unconverged_total(vs, ds):
+        tot = jnp.int32(0)
+        for gi in range(n_groups):
+            tot = tot + jnp.sum(
+                algs[gi].unconverged(vs[gi], ds[gi]).astype(jnp.int32))
+        return tot
+
+    def superstep(carry, scales, tiles, nbrs, key):
+        it, vs, ds, loads, pushes, iters = carry
+        node_uns, p_means, actives = [], [], []
+        for gi in range(n_groups):
+            if needs_pairs:
+                nu, pm = compute_pairs(algs[gi], vs[gi], ds[gi])
+            else:   # Node_un alone suffices (AllBlocks): cheaper reduce
+                un = algs[gi].unconverged(vs[gi], ds[gi])
+                nu = jnp.sum(un, axis=-1).astype(jnp.float32)
+                pm = None
+            node_uns.append(nu)
+            p_means.append(pm)
+            actives.append(prio.counts_from_pairs(nu) > 0)
+        selection = policy.device_select(
+            node_uns, p_means, actives, jax.random.fold_in(key, it),
+            q=q, alpha=alpha, samples=samples, num_blocks=bn)
+        new_vs, new_ds, new_iters = [], [], []
+        for gi in range(n_groups):
             if selection.shared:
-                sel = jnp.asarray(selection.sel)
-                msk = jnp.asarray(selection.msk)
-                for gi, g in enumerate(groups):
-                    if not actives[gi].any():
-                        continue
-                    g.values, g.deltas = sess._push_shared_fn(g)(
-                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                        sel, msk, g.push_scale)
+                v2, d2 = shared_push[gi](
+                    vs[gi], ds[gi], tiles[gi], nbrs[gi],
+                    selection.sel, selection.msk, scales[gi])
             else:
-                for gi, g in enumerate(groups):
-                    if not actives[gi].any():
-                        continue
-                    g.values, g.deltas = sess._push_indep_fn(g)(
-                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                        jnp.asarray(selection.sel[gi]),
-                        jnp.asarray(selection.msk[gi]), g.push_scale)
-            m.supersteps += 1
-            m.tile_loads += selection.tile_loads
-            m.job_block_pushes += selection.job_block_pushes
-        return m
+                v2, d2 = indep_push[gi](
+                    vs[gi], ds[gi], tiles[gi], nbrs[gi],
+                    selection.sel[gi], selection.msk[gi], scales[gi])
+            # a fully-converged group is never pushed, exactly as in the
+            # host driver: freezing it keeps sub-tolerance plus-times
+            # residual mass where convergence left it (min-plus pushes
+            # are exact no-ops either way)
+            keep = jnp.any(actives[gi])
+            new_vs.append(jnp.where(keep, v2, vs[gi]))
+            new_ds.append(jnp.where(keep, d2, ds[gi]))
+            new_iters.append(iters[gi] + actives[gi].astype(jnp.int32))
+        return (it + 1, tuple(new_vs), tuple(new_ds),
+                loads + selection.tile_loads,
+                pushes + selection.job_block_pushes,
+                tuple(new_iters))
+
+    def step_fn(state, scales, tiles, nbrs, max_steps, key):
+        def body(c):
+            return superstep(c, scales, tiles, nbrs, key)
+
+        def live(c):
+            return (unconverged_total(c[1], c[2]) > 0) & (c[0] < max_steps)
+
+        if k_sync == math.inf:
+            state = jax.lax.while_loop(live, body, state)
+        else:
+            def gated(c, _):
+                return jax.lax.cond(live(c), body, lambda x: x, c), None
+            state, _ = jax.lax.scan(gated, state, None, length=int(k_sync))
+        return state, unconverged_total(state[1], state[2])
+
+    return jax.jit(step_fn)
+
+
+def _run_device(policy: SchedulePolicy, sess,
+                max_supersteps: int) -> RunMetrics:
+    """Device driver: call the cached jitted step, sync once per chunk.
+
+    The sampling stream mirrors the host scheduler RNG's semantics: keys
+    are fold_in(fold_in(PRNGKey(seed), stream_pos), step), where
+    stream_pos is the scheduler's persistent position — advanced here by
+    the supersteps consumed — so repeated run()/step() calls keep drawing
+    fresh samples (and the legacy engine shim's per-call reset() restores
+    the historical restart).  Within a run the trajectory is invariant to
+    steps_per_sync (superstep t draws the same key regardless of
+    chunking), so tile_loads/supersteps are identical across cadences."""
+    groups = sess.view_groups()
+    step_fn = sess._device_step_fn(policy)
+    state = (jnp.int32(0),
+             tuple(g.values for g in groups),
+             tuple(g.deltas for g in groups),
+             jnp.float32(0), jnp.float32(0),
+             tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups))
+    scales = tuple(g.push_scale for g in groups)
+    tiles = tuple(g.graph.tiles for g in groups)
+    nbrs = tuple(g.graph.nbr_ids for g in groups)
+    # the budget the device compares against must be the SAME clamped
+    # value the host loop tests, or a >int32 budget could spin forever
+    budget = int(min(max_supersteps, np.iinfo(np.int32).max))
+    max_steps = jnp.int32(budget)
+    key = jax.random.fold_in(jax.random.PRNGKey(sess.seed),
+                             sess.scheduler._step)
+    m = RunMetrics()
+    while True:
+        state, un = step_fn(state, scales, tiles, nbrs, max_steps, key)
+        m.host_syncs += 1
+        it_h, un_h = int(state[0]), int(un)
+        if un_h == 0 or it_h >= budget:
+            break
+    sess.scheduler._step += it_h
+    for gi, g in enumerate(groups):
+        g.values, g.deltas = state[1][gi], state[2][gi]
+    m.supersteps = it_h
+    m.tile_loads = int(state[3])
+    m.job_block_pushes = int(state[4])
+    m.converged = un_h == 0
+    m.iterations_per_job = np.concatenate(
+        [np.asarray(x, dtype=np.int64) for x in state[5]])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+
+
+def _group_queues_device(nu, pm, key, gi, q, samples):
+    """One view group's DO queues on device: per-job sampling keys derived
+    fold_in(superstep key, group index) then split over the job axis, so
+    every (policy, group, job, step) draws from one reproducible stream."""
+    keys = jax.random.split(jax.random.fold_in(key, gi), nu.shape[0])
+    return jax.vmap(
+        lambda n, p, k: do_select_device(n, p, q, k, samples))(nu, pm, keys)
 
 
 class TwoLevel(SchedulePolicy):
-    """The paper's schedule: MPDS (host DO + global queue) + CAJS push.
+    """The paper's schedule: MPDS (DO queues + global queue) + CAJS push.
 
     The global queue is synthesized across ALL jobs' DO queues regardless
     of view (block ids are view-agnostic); one staging of each selected
-    block then serves both semiring families in the same superstep."""
+    block then serves both semiring families in the same superstep.  With
+    backend="device" both levels run inside the jitted superstep: per-job
+    do_select_device sampling feeds one weighted scatter-add synthesis
+    with reserved head slots."""
 
     name = "two_level"
 
@@ -182,6 +440,22 @@ class TwoLevel(SchedulePolicy):
         pushes = sum(int((nu[:, gq] > 0).sum()) for nu in node_un)
         return Selection(sel, msk, shared=True, tile_loads=int(len(gq)),
                          job_block_pushes=pushes)
+
+    def device_select(self, node_uns, p_means, actives, key, *, q, alpha,
+                      samples, num_blocks):
+        pri = jnp.zeros((num_blocks,), jnp.float32)
+        heads = jnp.zeros((num_blocks,), jnp.bool_)
+        for gi, (nu, pm) in enumerate(zip(node_uns, p_means)):
+            sel, msk = _group_queues_device(nu, pm, key, gi, q, samples)
+            pri, heads = accumulate_priority(pri, heads, sel, msk, q)
+        gsel, gmsk = synthesize_topq(pri, heads, q, alpha)
+        pushes = jnp.float32(0)   # float32 accumulators: int32 would wrap
+        for nu in node_uns:       # on long runs, float32 only rounds >2^24
+            pushes = pushes + jnp.sum(
+                ((nu[:, gsel] > 0) & (gmsk > 0)[None, :])
+                .astype(jnp.float32))
+        return Selection(gsel, gmsk, shared=True,
+                         tile_loads=jnp.sum(gmsk), job_block_pushes=pushes)
 
 
 class Independent(SchedulePolicy):
@@ -209,6 +483,18 @@ class Independent(SchedulePolicy):
         return Selection(sels, msks, shared=False, tile_loads=loads,
                          job_block_pushes=pushes)
 
+    def device_select(self, node_uns, p_means, actives, key, *, q, alpha,
+                      samples, num_blocks):
+        sels, msks = [], []
+        loads = jnp.float32(0)
+        for gi, (nu, pm) in enumerate(zip(node_uns, p_means)):
+            sel, msk = _group_queues_device(nu, pm, key, gi, q, samples)
+            sels.append(sel)
+            msks.append(msk)
+            loads = loads + jnp.sum(msk)
+        return Selection(sels, msks, shared=False, tile_loads=loads,
+                         job_block_pushes=loads)
+
 
 class AllBlocks(SchedulePolicy):
     """Non-prioritized synchronous baseline: all blocks, shared staging."""
@@ -224,100 +510,31 @@ class AllBlocks(SchedulePolicy):
         return Selection(sel, msk, shared=True, tile_loads=bn,
                          job_block_pushes=bn * n_active)
 
+    def device_select(self, node_uns, p_means, actives, key, *, q, alpha,
+                      samples, num_blocks):
+        n_active = jnp.float32(0)
+        for act in actives:
+            n_active = n_active + jnp.sum(act.astype(jnp.float32))
+        return Selection(jnp.arange(num_blocks, dtype=jnp.int32),
+                         jnp.ones(num_blocks, jnp.float32), shared=True,
+                         tile_loads=jnp.float32(num_blocks),
+                         job_block_pushes=num_blocks * n_active)
 
-class Fused(SchedulePolicy):
-    """Beyond-paper: entire two-level loop in one on-device while_loop.
 
-    Heterogeneous sessions run every view's while-loop body over one
-    SHARED selection: per-group priority pairs feed one global top-q, then
-    each group's semiring push (plus-times / min-plus) processes the same
-    gsel — tile_loads counts that staging once, as in the host TwoLevel.
-    Per-job push/iteration counters ride in the while_loop carry so
-    RunMetrics stays comparable with the host policies."""
+class Fused(TwoLevel):
+    """Beyond-paper alias: TwoLevel(backend="device", steps_per_sync=inf).
+
+    The entire two-level loop — priority pairs, per-job DO sampling,
+    global synthesis, push, convergence test — is one on-device
+    lax.while_loop with no host round-trips until the fixpoint.  Its
+    historical dedicated run() fork is gone: this class only pins the
+    backend; pass a finite steps_per_sync to trade convergence-latency
+    for mid-batch submit/detach opportunities."""
 
     name = "fused"
-    needs_pairs = False
 
-    def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
-        groups = sess.view_groups()
-        n_groups = len(groups)
-        q, alpha = sess.q, sess.alpha
-        bn = sess.scheduler.num_blocks
-        algs = [g.alg for g in groups]
-        graphs = [g.graph for g in groups]
-        pushes_one = [g.push_one for g in groups]
-        scales = [g.push_scale for g in groups]
-        n_res = max(0, q - int(math.ceil(alpha * q)))  # reserved head slots
-
-        def body(carry):
-            it, vs, ds, loads, pushes, iters = carry
-            node_uns = []
-            gpri = jnp.zeros((bn,), jnp.float32)
-            for gi in range(n_groups):
-                node_un, p_mean = compute_pairs(algs[gi], vs[gi], ds[gi])
-                node_uns.append(node_un)
-                score = prio.do_score(node_un, p_mean)      # [J_g, B_N]
-                topv, topi = jax.lax.top_k(score, q)        # per-job queues
-                valid = jnp.isfinite(topv)
-                w = jnp.arange(q, 0, -1, dtype=jnp.float32) * valid
-                gpri = gpri.at[topi.reshape(-1)].add(w.reshape(-1))
-                # reserve: force per-job heads into the queue (device
-                # analogue of the paper's (1-alpha)q individual-head slots)
-                if n_res > 0:
-                    heads = topi[:, 0]
-                    head_valid = valid[:, 0]
-                    gpri = gpri.at[heads].add(
-                        jnp.where(head_valid, 1e12, 0.0))
-            gv, gsel = jax.lax.top_k(gpri, q)
-            gmask = (gv > 0.0).astype(jnp.float32)
-            new_vs, new_ds, new_iters = [], [], []
-            for gi in range(n_groups):
-                # metrics, same definitions as the host TwoLevel policy:
-                # a (job, block) processing event needs the block selected
-                # AND the job unconverged on it; a job iterates while any
-                # block is hot.  float32 accumulator like `loads`: int32
-                # would wrap on long runs (J*q per step), float32 only
-                # rounds past 2^24
-                pushes = pushes + jnp.sum(
-                    ((node_uns[gi][:, gsel] > 0) & (gmask > 0)[None, :])
-                    .astype(jnp.float32))
-                new_iters.append(
-                    iters[gi]
-                    + jnp.any(node_uns[gi] > 0, axis=1).astype(jnp.int32))
-                v2, d2 = jax.vmap(
-                    pushes_one[gi],
-                    in_axes=(0, 0, None, None, None, None, 0))(
-                    vs[gi], ds[gi], graphs[gi].tiles, graphs[gi].nbr_ids,
-                    gsel.astype(jnp.int32), gmask, scales[gi])
-                new_vs.append(v2)
-                new_ds.append(d2)
-            # one staging of each selected block serves every view group
-            return (it + 1, tuple(new_vs), tuple(new_ds),
-                    loads + jnp.sum(gmask), pushes, tuple(new_iters))
-
-        def cond(carry):
-            it, vs, ds, _, _, _ = carry
-            un = sum(jnp.sum(algs[gi].unconverged(vs[gi], ds[gi]))
-                     for gi in range(n_groups))
-            return (un > 0) & (it < max_supersteps)
-
-        it, vs, ds, loads, pushes, iters = jax.lax.while_loop(
-            cond, body,
-            (jnp.int32(0),
-             tuple(g.values for g in groups),
-             tuple(g.deltas for g in groups),
-             jnp.float32(0), jnp.float32(0),
-             tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups)))
-        for gi, g in enumerate(groups):
-            g.values, g.deltas = vs[gi], ds[gi]
-        m = RunMetrics()
-        m.supersteps = int(it)
-        m.tile_loads = int(loads)
-        m.job_block_pushes = int(pushes)
-        m.converged = bool(int(it) < max_supersteps)
-        m.iterations_per_job = np.concatenate(
-            [np.asarray(x, dtype=np.int64) for x in iters])
-        return m
+    def __init__(self, *, steps_per_sync: Union[int, float] = math.inf):
+        super().__init__(backend=DEVICE, steps_per_sync=steps_per_sync)
 
 
 POLICIES = {p.name: p for p in (TwoLevel, Fused, Independent, AllBlocks)}

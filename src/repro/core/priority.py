@@ -33,6 +33,19 @@ def block_pairs(vertex_priority: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]
     return node_un, p_mean
 
 
+def counts_from_pairs(node_un):
+    """Per-job unconverged-vertex totals derived from the pair computation.
+
+    Summing Node_un over blocks counts exactly the unconverged vertices
+    (a vertex is unconverged iff its positive priority entered Node_un), so
+    a driver that already computed <Node_un, P_mean> gets the convergence
+    counts for free — one device dispatch per group per superstep instead
+    of a separate counts reduction.  Works on numpy and jax arrays alike
+    ([..., B_N] -> [...]).
+    """
+    return node_un.sum(-1)
+
+
 # --------------------------------------------------------------------------
 # Function 1: CBP — host scalar comparator, verbatim from the paper
 # --------------------------------------------------------------------------

@@ -78,3 +78,20 @@ def compute_pairs(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray):
     """[J, B_N, Vb] -> (node_un [J,B_N], p_mean [J,B_N])."""
     p = alg.vertex_priority(values, deltas)
     return prio.block_pairs(p)
+
+
+def shared_push_fn(semiring: str, push_one, use_pallas: bool):
+    """Stacked-job CAJS push callable (un-jitted): all jobs process the
+    same [q] selection.  The ONE place the pallas-vs-vmap dispatch and the
+    in_axes wiring live — jitted+cached by GraphSession for the host
+    driver, inlined into the compiled superstep by the device driver."""
+    if use_pallas:
+        from functools import partial
+        from repro.kernels.mj_spmm import ops as mj_ops
+        return partial(mj_ops.push_shared, semiring=semiring)
+    return jax.vmap(push_one, in_axes=(0, 0, None, None, None, None, 0))
+
+
+def indep_push_fn(push_one):
+    """Per-job-selection push callable (un-jitted): each job its own [q]."""
+    return jax.vmap(push_one, in_axes=(0, 0, None, None, 0, 0, 0))

@@ -7,10 +7,24 @@ serve scheduler feeds it pairs per (request-stream, request-group) — the
 "interlayer" design of the paper means the policy core is shared verbatim
 (DESIGN.md §4).
 
-The scheduler owns the sampling RNG so repeated `select` calls advance one
-reproducible stream; `reset()` restores the initial seed (the legacy
-`ConcurrentEngine` shim resets per run_* call to stay bit-identical with
-the historical per-call `default_rng(seed)` behaviour).
+Both scheduling levels are BACKEND-PLUGGABLE:
+
+  backend="host"   - numpy + the exact CBP comparator, sampling from the
+                     scheduler-owned `numpy` RNG (the faithful paper
+                     transcription; every `select` call advances one
+                     reproducible stream, `reset()` restores it);
+  backend="device" - the jnp analogues (do_select_device /
+                     global_queue_device), sampling with `jax.random` keys
+                     derived as fold_in(seed, call_index) so repeated calls
+                     advance an equally reproducible stream.  The list
+                     in/out interface is unchanged — callers such as the
+                     serve scheduler switch backends without code changes.
+
+The jitted superstep drivers (repro.core.policy) inline the same device
+functions inside their compiled step rather than calling through this
+object (an object call per superstep would reintroduce the host sync the
+device backend exists to remove); this object remains the one home for the
+scheduling parameters (q, alpha, samples, seed) either way.
 """
 
 from __future__ import annotations
@@ -19,11 +33,16 @@ import math
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
+import jax
+import jax.numpy as jnp
 
-from repro.core.do_select import do_select, DEFAULT_SAMPLES
-from repro.core.global_q import global_queue, DEFAULT_ALPHA
+from repro.core.do_select import do_select, do_select_device, DEFAULT_SAMPLES
+from repro.core.global_q import (global_queue, global_queue_device,
+                                 DEFAULT_ALPHA)
 
 PRITER_C = 100.0  # paper §5.1: q = C * B_N / sqrt(V_N), C = 100
+
+BACKENDS = ("host", "device")
 
 
 def optimal_queue_length(num_blocks: int, n_vertices: int,
@@ -38,19 +57,33 @@ class TwoLevelScheduler:
     def __init__(self, num_blocks: int, q: int, *,
                  alpha: float = DEFAULT_ALPHA,
                  samples: int = DEFAULT_SAMPLES,
-                 seed: int = 0):
+                 seed: int = 0,
+                 backend: str = "host"):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}: {backend}")
         self.num_blocks = num_blocks
         self.q = q
         self.alpha = alpha
         self.samples = samples
         self.seed = seed
+        self.backend = backend
         self.rng = np.random.default_rng(seed)
+        self._step = 0        # device-backend stream position (fold_in index)
+        self._device_fns = {}  # jitted select/synthesis, keyed on (q, knobs)
 
     def reset(self, seed: Optional[int] = None) -> None:
-        """Restore the RNG stream (optionally re-seeding)."""
+        """Restore the RNG stream (optionally re-seeding), both backends."""
         if seed is not None:
             self.seed = seed
         self.rng = np.random.default_rng(self.seed)
+        self._step = 0
+
+    def _next_key(self):
+        """Next device sampling key: fold_in(seed, call_index) — one
+        reproducible stream, mirroring the host RNG's advance-per-call."""
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), self._step)
+        self._step += 1
+        return key
 
     # -- level 1: per-job DO queues (paper §4.2.2, Function 2) ---------------
 
@@ -63,22 +96,65 @@ class TwoLevelScheduler:
         RNG draws (converged jobs / free session slots).
         """
         q = self.q if q is None else q
+        if self.backend == "device":
+            return self._job_queues_device(node_un, p_mean, active, q)
         return [do_select(node_un[j], p_mean[j], q, self.rng, self.samples)
                 if active is None or active[j]
                 else np.empty(0, dtype=np.int64)
                 for j in range(node_un.shape[0])]
+
+    def _job_queues_device(self, node_un, p_mean, active, q):
+        # the jitted vmap is cached per (q, samples): repeated calls (the
+        # serve scheduler invokes this every decode step) re-dispatch the
+        # same executable instead of re-tracing a fresh lambda
+        key = ("queues", q, self.samples)
+        if key not in self._device_fns:
+            samples = self.samples
+            self._device_fns[key] = jax.jit(jax.vmap(
+                lambda nu, pm, k: do_select_device(nu, pm, q, k, samples)))
+        j = node_un.shape[0]
+        keys = jax.random.split(self._next_key(), max(1, j))
+        sel, msk = self._device_fns[key](
+            jnp.asarray(node_un, jnp.float32),
+            jnp.asarray(p_mean, jnp.float32), keys[:j])
+        sel, msk = np.asarray(sel), np.asarray(msk)
+        return [sel[i][msk[i] > 0].astype(np.int64)
+                if active is None or active[i]
+                else np.empty(0, dtype=np.int64)
+                for i in range(j)]
 
     # -- level 2: global queue (paper §4.2.3, Fig. 7) ------------------------
 
     def synthesize(self, queues: Sequence[np.ndarray],
                    q: Optional[int] = None) -> np.ndarray:
         q = self.q if q is None else q
-        gq = global_queue(queues, self.num_blocks, q, self.alpha)
+        if self.backend == "device":
+            gq = self._synthesize_device(queues, q)
+        else:
+            gq = global_queue(queues, self.num_blocks, q, self.alpha)
         # metrics honesty: callers stage (and count) exactly len(gq) blocks,
         # so the synthesis must never hand back more than fit in the queue
         assert len(gq) <= max(1, q), \
             f"global queue overflows its budget: {len(gq)} > {q}"
         return gq
+
+    def _synthesize_device(self, queues, q):
+        key = ("synth", q, float(self.alpha))
+        if key not in self._device_fns:
+            nb, alpha = self.num_blocks, float(self.alpha)
+            self._device_fns[key] = jax.jit(
+                lambda s, m: global_queue_device(s, m, nb, q, alpha))
+        j = max(1, len(queues))
+        sel = np.zeros((j, q), dtype=np.int32)
+        msk = np.zeros((j, q), dtype=np.float32)
+        for i, jq in enumerate(queues):
+            L = min(len(jq), q)
+            sel[i, :L] = jq[:L]
+            msk[i, :L] = 1.0
+        gsel, gmsk = self._device_fns[key](jnp.asarray(sel),
+                                           jnp.asarray(msk))
+        gsel, gmsk = np.asarray(gsel), np.asarray(gmsk)
+        return gsel[gmsk > 0].astype(np.int64)
 
     def select(self, node_un: np.ndarray, p_mean: np.ndarray,
                active: Optional[np.ndarray] = None,

@@ -38,7 +38,6 @@ sharded over its own job axis).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
@@ -47,7 +46,8 @@ import jax.numpy as jnp
 
 from repro.algorithms.base import Algorithm, PLUS_TIMES
 from repro.core.policy import RunMetrics, SchedulePolicy, TwoLevel
-from repro.core.push import compute_pairs, push_plus_one, push_min_one
+from repro.core.push import (compute_pairs, indep_push_fn, push_plus_one,
+                             push_min_one, shared_push_fn)
 from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
                                   PRITER_C)
 from repro.core.do_select import DEFAULT_SAMPLES
@@ -389,6 +389,34 @@ class GraphSession:
 
     # -- jitted primitives (shared by every policy), cached per view ---------
 
+    def _device_step_fn(self, policy):
+        """Compiled device superstep for `policy`, cached on the session.
+
+        Keyed on everything that shapes the traced program: the policy's
+        selection code (the `device_select` function itself plus
+        needs_pairs, so `Fused()` and the literal
+        `TwoLevel(backend="device", steps_per_sync=inf)` share one
+        compilation while a subclass overriding `device_select` gets its
+        own), steps_per_sync, the view keys (which algs/semirings
+        participate), per-view capacities (array shapes), q, alpha,
+        samples and the pallas toggle.  Repeated run() calls,
+        submit/detach cycles at unchanged capacity, and re-placement on a
+        mesh all REUSE the same compilation (jax re-specializes on
+        shardings internally); only a genuinely new program shape — a new
+        view, a capacity doubling, a different sync cadence — compiles
+        again."""
+        from repro.core.policy import build_device_step
+        groups = self.view_groups()
+        key = ("superstep", type(policy).device_select, policy.needs_pairs,
+               policy.steps_per_sync,
+               tuple(g.key for g in groups),
+               tuple(g.capacity for g in groups),
+               self.q, float(self.alpha), int(self.samples),
+               self.use_pallas)
+        if key not in self._jit_cache:
+            self._jit_cache[key] = build_device_step(policy, self)
+        return self._jit_cache[key]
+
     def _pairs_fn(self, grp: ViewGroup):
         key = ("pairs", grp.key)
         if key not in self._jit_cache:
@@ -409,24 +437,15 @@ class GraphSession:
         """All jobs of the view process the same selected blocks (CAJS)."""
         key = ("push_shared", grp.key, self.use_pallas)
         if key not in self._jit_cache:
-            if self.use_pallas:
-                from repro.kernels.mj_spmm import ops as mj_ops
-                fn = partial(mj_ops.push_shared, semiring=grp.semiring)
-                self._jit_cache[key] = jax.jit(
-                    lambda v, d, t, n, si, sm, ps: fn(v, d, t, n, si, sm, ps))
-            else:
-                push = grp.push_one
-                self._jit_cache[key] = jax.jit(jax.vmap(
-                    push, in_axes=(0, 0, None, None, None, None, 0)))
+            self._jit_cache[key] = jax.jit(shared_push_fn(
+                grp.semiring, grp.push_one, self.use_pallas))
         return self._jit_cache[key]
 
     def _push_indep_fn(self, grp: ViewGroup):
         """Each job processes its own selection (redundancy baseline)."""
         key = ("push_indep", grp.key)
         if key not in self._jit_cache:
-            push = grp.push_one
-            self._jit_cache[key] = jax.jit(jax.vmap(
-                push, in_axes=(0, 0, None, None, 0, 0, 0)))
+            self._jit_cache[key] = jax.jit(indep_push_fn(grp.push_one))
         return self._jit_cache[key]
 
     # -- placement -----------------------------------------------------------
@@ -449,7 +468,11 @@ class GraphSession:
         """Advance all active jobs until they converge (or the budget ends).
 
         Jobs submitted after this returns resume from the shared state:
-        call run() again to drive the new mix — that is the arrival model."""
+        call run() again to drive the new mix — that is the arrival model.
+        Under a device-backend policy with steps_per_sync=K the session
+        only regains control every K supersteps, so an arrival waits up to
+        K supersteps before the next run() can admit it (see docs/API.md,
+        "Scheduler backends")."""
         if not self.groups:
             raise ValueError("no jobs submitted yet")
         policy = TwoLevel() if policy is None else policy

@@ -16,6 +16,16 @@ bit-for-bit, as the single-device run (asserted by tests/test_dist_graph.py).
 
 Jobs that do not divide the axis fall back to replication for the remainder-
 free guarantee (documented, not silently wrong).
+
+Composition with the device-resident scheduler (core.policy,
+backend="device"): the compiled superstep takes each group's
+values/deltas/push_scale and the replicated tiles as ARGUMENTS, so the
+placement below flows straight into the jitted scan/while_loop — jax
+re-specializes the cached compilation on the new shardings, the per-job DO
+sampling and pushes partition along the job axis, and the only cross-device
+traffic per superstep is the global-queue scatter-add and the scalar
+convergence all-reduce.  With steps_per_sync=K even those stay on device
+for K supersteps per host round-trip.
 """
 
 from __future__ import annotations

@@ -66,11 +66,16 @@ class ConcurrentServeScheduler:
     """Admission control for each decode step over shared weights."""
 
     def __init__(self, n_groups: int, batch_budget: int, *,
-                 alpha: float = 0.8, seed: int = 0):
+                 alpha: float = 0.8, seed: int = 0, backend: str = "host"):
+        """backend selects where the two-level policy core computes its
+        selection ("host" numpy / "device" jnp) — the SAME pluggable
+        TwoLevelScheduler core as the graph engine, so the serve layer
+        inherits the device analogues without any code of its own."""
         self.n_groups = n_groups
         self.batch_budget = batch_budget
         self.scheduler = TwoLevelScheduler(
-            n_groups, max(1, batch_budget // 4), alpha=alpha, seed=seed)
+            n_groups, max(1, batch_budget // 4), alpha=alpha, seed=seed,
+            backend=backend)
         self.streams: Dict[int, RequestStream] = {}
         # per-family admitted counts of the most recent schedule_step
         self.last_admitted_by_family: Dict[str, int] = {}

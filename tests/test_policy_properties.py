@@ -7,8 +7,9 @@ min-plus (the fixpoint is schedule-invariant — min is idempotent and
 path sums accumulate in path order), and within a tight tolerance for
 plus-times (a schedule decides where the residual sub-tolerance mass
 sits).  Random small CSRs × heterogeneous job mixes × seeds probe that
-invariant, plus the lifecycle property that detach+resubmit mid-run never
-perturbs surviving jobs.
+invariant — across policies on the host backend, and across the full
+backend="device" × steps_per_sync grid — plus the lifecycle property that
+detach+resubmit mid-run never perturbs surviving jobs.
 
 Runs under the real `hypothesis` when installed, else the deterministic
 shim in tests/_hypothesis_shim.py (registered by conftest).
@@ -80,6 +81,33 @@ def test_all_policies_reach_the_same_per_job_fixpoint(seed, n, deg,
     algs = _job_mix(np.random.default_rng(seed + 1), n, weighted)
     _, ref = _run_all(csr, algs, TwoLevel(), seed=seed % 97)
     for policy in (Fused(), Independent(), AllBlocks()):
+        _, got = _run_all(csr, algs, policy, seed=seed % 97)
+        for alg, g, w in zip(algs, got, ref):
+            _assert_same_fixpoint(alg, g, w)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([24, 40]),
+       deg=st.integers(1, 4), weighted=st.booleans())
+@settings(max_examples=5, deadline=None)
+def test_device_backend_matches_host_fixpoint_at_any_sync_cadence(
+        seed, n, deg, weighted):
+    """The tentpole invariant: moving BOTH scheduling levels on device —
+    and batching any number of supersteps per host sync — is a schedule
+    change only, never an arithmetic one.  Every policy on
+    backend="device", at steps_per_sync 1 and 4 (and Fused's inf), must
+    reach the host TwoLevel fixpoint: exactly for min-plus, within the
+    plus-times tolerance."""
+    csr = _random_csr(seed, n, deg, weighted)
+    algs = _job_mix(np.random.default_rng(seed + 1), n, weighted)
+    _, ref = _run_all(csr, algs, TwoLevel(), seed=seed % 97)
+    grid = [TwoLevel(backend="device", steps_per_sync=1),
+            TwoLevel(backend="device", steps_per_sync=4),
+            Independent(backend="device", steps_per_sync=1),
+            Independent(backend="device", steps_per_sync=4),
+            AllBlocks(backend="device", steps_per_sync=1),
+            AllBlocks(backend="device", steps_per_sync=4),
+            Fused(steps_per_sync=4), Fused()]
+    for policy in grid:
         _, got = _run_all(csr, algs, policy, seed=seed % 97)
         for alg, g, w in zip(algs, got, ref):
             _assert_same_fixpoint(alg, g, w)

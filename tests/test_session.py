@@ -37,8 +37,11 @@ def _static_reference(algs, csr, block_size, seed):
     return eng.results()
 
 
-@pytest.mark.parametrize("policy", [TwoLevel(), Fused()],
-                         ids=["two_level", "fused"])
+@pytest.mark.parametrize(
+    "policy",
+    [TwoLevel(), Fused(),
+     TwoLevel(backend="device", steps_per_sync=4)],
+    ids=["two_level", "fused", "device_k4"])
 def test_mid_run_submit_matches_static_batch(policy):
     algs = [PageRank(), PersonalizedPageRank(source=7)]
     sess = GraphSession(CSR, 32, capacity=2, seed=5)
