@@ -82,6 +82,11 @@ class RunMetrics:
     host_syncs: int = 0            # scheduling host<->device round-trips
     iterations_per_job: Optional[np.ndarray] = None
     converged: bool = False
+    # evolving-graph counters (repro.stream), drained from the session's
+    # apply_updates() calls since the previous run()
+    updates_applied: int = 0       # edge insert/delete ops absorbed
+    dirty_blocks: int = 0          # blocks marked update-affected
+    reseed_fraction: float = 0.0   # re-seeded share of active job state
 
 
 @dataclasses.dataclass
@@ -180,6 +185,10 @@ def _run_host(policy: SchedulePolicy, sess,
     # stand-in zeros are built on first skip only
     done = [None] * len(groups)
     bn = sess.scheduler.num_blocks
+    # dirty-block priority injection (repro.stream): update-affected blocks
+    # enter every job's DO queue boosted on the FIRST superstep after
+    # apply_updates — only where the job actually has pending work there
+    boost = sess._consume_dirty_boost()
 
     def _mark_done(gi):
         g = groups[gi]
@@ -199,11 +208,14 @@ def _run_host(policy: SchedulePolicy, sess,
                     p_mean.append(done[gi][1])
                     continue
                 nu, pm = map(np.asarray, pairs_fns[gi](g.values, g.deltas))
+                if boost is not None:
+                    pm = pm + boost[None, :] * (nu > 0)
                 node_un.append(nu)
                 p_mean.append(pm)
                 actives.append(prio.counts_from_pairs(nu) > 0)
                 if not actives[gi].any():
                     _mark_done(gi)
+            boost = None
         else:
             for gi, g in enumerate(groups):
                 if done[gi] is not None:
@@ -234,7 +246,7 @@ def _run_host(policy: SchedulePolicy, sess,
                     continue
                 g.values, g.deltas = sess._push_shared_fn(g)(
                     g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                    sel, msk, g.push_scale)
+                    sel, msk, g.push_scale, g.overlay)
         else:
             for gi, g in enumerate(groups):
                 if not actives[gi].any():
@@ -242,7 +254,7 @@ def _run_host(policy: SchedulePolicy, sess,
                 g.values, g.deltas = sess._push_indep_fn(g)(
                     g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
                     jnp.asarray(selection.sel[gi]),
-                    jnp.asarray(selection.msk[gi]), g.push_scale)
+                    jnp.asarray(selection.msk[gi]), g.push_scale, g.overlay)
         m.supersteps += 1
         m.tile_loads += selection.tile_loads
         m.job_block_pushes += selection.job_block_pushes
@@ -258,17 +270,22 @@ def build_device_step(policy: SchedulePolicy, sess):
     """Compile the session's superstep for `policy` into one jitted step
     function.  Returned callable:
 
-        step_fn(state, scales, tiles, nbrs, max_steps, key)
+        step_fn(state, scales, tiles, nbrs, overlays, max_steps, key)
             -> (state, unconverged_total)
 
     where state = (it, values_tuple, deltas_tuple, loads, pushes,
-    iters_tuple).  Finite steps_per_sync runs a lax.scan of that many
-    gated supersteps (a step no-ops — and counts nothing — once all jobs
-    converge or the budget is spent); steps_per_sync=inf runs a
+    iters_tuple, boost).  Finite steps_per_sync runs a lax.scan of that
+    many gated supersteps (a step no-ops — and counts nothing — once all
+    jobs converge or the budget is spent); steps_per_sync=inf runs a
     lax.while_loop to the fixpoint.  Graph tiles / neighbour ids / push
-    scales are ARGUMENTS, not closure constants, so one compilation serves
-    every run() call, resubmission, and mesh placement (jax re-specializes
-    on sharding, not on values).  Cache via session._device_step_fn."""
+    scales — and each view's delta-COO overlay, so live update batches
+    (repro.stream) never retrace — are ARGUMENTS, not closure constants:
+    one compilation serves every run() call, resubmission, update batch,
+    and mesh placement (jax re-specializes on sharding, not on values).
+    `boost` is the dirty-block priority injection: [B_N] added to every
+    group's P_mean (where pending) on the first superstep after
+    apply_updates, then zeroed in the carry.  Cache via
+    session._device_step_fn."""
     groups = sess.view_groups()
     n_groups = len(groups)
     algs = [g.alg for g in groups]
@@ -290,12 +307,13 @@ def build_device_step(policy: SchedulePolicy, sess):
                 algs[gi].unconverged(vs[gi], ds[gi]).astype(jnp.int32))
         return tot
 
-    def superstep(carry, scales, tiles, nbrs, key):
-        it, vs, ds, loads, pushes, iters = carry
+    def superstep(carry, scales, tiles, nbrs, ovs, key):
+        it, vs, ds, loads, pushes, iters, boost = carry
         node_uns, p_means, actives = [], [], []
         for gi in range(n_groups):
             if needs_pairs:
                 nu, pm = compute_pairs(algs[gi], vs[gi], ds[gi])
+                pm = pm + boost[None, :] * (nu > 0)
             else:   # Node_un alone suffices (AllBlocks): cheaper reduce
                 un = algs[gi].unconverged(vs[gi], ds[gi])
                 nu = jnp.sum(un, axis=-1).astype(jnp.float32)
@@ -311,11 +329,12 @@ def build_device_step(policy: SchedulePolicy, sess):
             if selection.shared:
                 v2, d2 = shared_push[gi](
                     vs[gi], ds[gi], tiles[gi], nbrs[gi],
-                    selection.sel, selection.msk, scales[gi])
+                    selection.sel, selection.msk, scales[gi], ovs[gi])
             else:
                 v2, d2 = indep_push[gi](
                     vs[gi], ds[gi], tiles[gi], nbrs[gi],
-                    selection.sel[gi], selection.msk[gi], scales[gi])
+                    selection.sel[gi], selection.msk[gi], scales[gi],
+                    ovs[gi])
             # a fully-converged group is never pushed, exactly as in the
             # host driver: freezing it keeps sub-tolerance plus-times
             # residual mass where convergence left it (min-plus pushes
@@ -327,11 +346,12 @@ def build_device_step(policy: SchedulePolicy, sess):
         return (it + 1, tuple(new_vs), tuple(new_ds),
                 loads + selection.tile_loads,
                 pushes + selection.job_block_pushes,
-                tuple(new_iters))
+                tuple(new_iters),
+                jnp.zeros_like(boost))   # injection consumed: one superstep
 
-    def step_fn(state, scales, tiles, nbrs, max_steps, key):
+    def step_fn(state, scales, tiles, nbrs, ovs, max_steps, key):
         def body(c):
-            return superstep(c, scales, tiles, nbrs, key)
+            return superstep(c, scales, tiles, nbrs, ovs, key)
 
         def live(c):
             return (unconverged_total(c[1], c[2]) > 0) & (c[0] < max_steps)
@@ -361,14 +381,19 @@ def _run_device(policy: SchedulePolicy, sess,
     chunking), so tile_loads/supersteps are identical across cadences."""
     groups = sess.view_groups()
     step_fn = sess._device_step_fn(policy)
+    boost = sess._consume_dirty_boost()
+    bn = sess.scheduler.num_blocks
     state = (jnp.int32(0),
              tuple(g.values for g in groups),
              tuple(g.deltas for g in groups),
              jnp.float32(0), jnp.float32(0),
-             tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups))
+             tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups),
+             jnp.zeros(bn, jnp.float32) if boost is None
+             else jnp.asarray(boost, jnp.float32))
     scales = tuple(g.push_scale for g in groups)
     tiles = tuple(g.graph.tiles for g in groups)
     nbrs = tuple(g.graph.nbr_ids for g in groups)
+    ovs = tuple(g.overlay for g in groups)
     # the budget the device compares against must be the SAME clamped
     # value the host loop tests, or a >int32 budget could spin forever
     budget = int(min(max_supersteps, np.iinfo(np.int32).max))
@@ -377,7 +402,7 @@ def _run_device(policy: SchedulePolicy, sess,
                              sess.scheduler._step)
     m = RunMetrics()
     while True:
-        state, un = step_fn(state, scales, tiles, nbrs, max_steps, key)
+        state, un = step_fn(state, scales, tiles, nbrs, ovs, max_steps, key)
         m.host_syncs += 1
         it_h, un_h = int(state[0]), int(un)
         if un_h == 0 or it_h >= budget:

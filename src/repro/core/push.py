@@ -5,6 +5,14 @@ the pending deltas of the selected blocks and scatters their contributions
 into the neighbours' deltas (paper Eq. 3, both semirings).  These are pure
 functions of stacked [B_N, Vb] state, shared by every schedule policy and
 by the pod-scale dry-run (repro.launch.graph_dryrun).
+
+Evolving graphs (repro.stream) stage a bounded per-block delta-COO
+overlay alongside each tile (graph.structure.TileOverlay): a push of
+block b consumes b's pending deltas through the base tile AND through
+b's overlay edges in the same staging.  Every push takes the overlay as
+its trailing argument; the all-inert capacity-0 overlay of a
+never-updated view contributes exact no-ops (plus-times adds 0.0,
+min-plus mins inf), keeping frozen-graph runs bitwise identical.
 """
 
 from __future__ import annotations
@@ -14,6 +22,13 @@ import jax.numpy as jnp
 
 from repro.algorithms.base import Algorithm
 from repro.core import priority as prio
+from repro.graph.structure import TileOverlay, empty_overlay
+
+__all__ = [
+    "push_plus_one", "push_min_one", "compute_pairs",
+    "shared_push_fn", "indep_push_fn",
+    "overlay_push_plus", "overlay_push_min",
+]
 
 
 def _block_mask(sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
@@ -23,11 +38,59 @@ def _block_mask(sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
     return m.at[sel_ids].max(sel_mask > 0)
 
 
+def _overlay_rows(ov: TileOverlay, sel_ids: jnp.ndarray):
+    """Gather the overlay rows of the selected blocks: [q, C] each."""
+    return ov.src_u[sel_ids], ov.dst[sel_ids], ov.w[sel_ids], ov.mask[sel_ids]
+
+
+def overlay_push_plus(deltas: jnp.ndarray, d_sel: jnp.ndarray,
+                      ov: TileOverlay, sel_ids: jnp.ndarray) -> jnp.ndarray:
+    """Scatter the selected blocks' overlay contributions into `deltas`.
+
+    d_sel [q, Vb] must be the SAME consumed-and-scaled deltas the base
+    tile push used (pre-consumption values), so an overlay edge pushes
+    exactly once per staging, in lockstep with the tile."""
+    if ov.capacity == 0:
+        return deltas
+    src_u, dst, w, mask = _overlay_rows(ov, sel_ids)          # [q, C]
+    q = sel_ids.shape[0]
+    contrib = d_sel[jnp.arange(q)[:, None], src_u] * w * mask  # [q, C]
+    flat = deltas.reshape(-1)
+    flat = flat.at[dst.reshape(-1)].add(contrib.reshape(-1))
+    return flat.reshape(deltas.shape)
+
+
+def overlay_push_min(values: jnp.ndarray, deltas: jnp.ndarray,
+                     d_sel: jnp.ndarray, ov: TileOverlay,
+                     sel_ids: jnp.ndarray):
+    """Min-plus analogue: relax the selected blocks' overlay edges.
+
+    d_sel [q, Vb] is the consumed pending distance of the selected blocks
+    (inf where nothing pends / the slot is padded)."""
+    if ov.capacity == 0:
+        return values, deltas
+    src_u, dst, w, mask = _overlay_rows(ov, sel_ids)          # [q, C]
+    q = sel_ids.shape[0]
+    cand = jnp.where(mask > 0,
+                     d_sel[jnp.arange(q)[:, None], src_u] + w,
+                     jnp.inf).reshape(-1)
+    idx = dst.reshape(-1)
+    vb = values.shape[-1]
+    v_flat, d_flat = values.reshape(-1), deltas.reshape(-1)
+    old = v_flat[idx]
+    v_flat = v_flat.at[idx].min(cand)
+    new = v_flat[idx]
+    d_flat = d_flat.at[idx].min(jnp.where(new < old, new, jnp.inf))
+    return v_flat.reshape(-1, vb), d_flat.reshape(-1, vb)
+
+
 def push_plus_one(values: jnp.ndarray, deltas: jnp.ndarray,
                   tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
                   sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
-                  push_scale: jnp.ndarray):
+                  push_scale: jnp.ndarray, overlay: TileOverlay = None):
     """One job, PLUS_TIMES semiring. values/deltas [B_N, Vb]."""
+    if overlay is None:
+        overlay = empty_overlay(values.shape[0])
     consumed = _block_mask(sel_ids, sel_mask, values.shape[0])[:, None]
     raw = jnp.where(consumed, deltas, 0.0)
     # mask padded selection slots: a padded slot aliases block 0 and must not
@@ -40,15 +103,18 @@ def push_plus_one(values: jnp.ndarray, deltas: jnp.ndarray,
     dst = nbr_ids[sel_ids].reshape(-1)                    # [q*K]
     deltas = deltas.at[dst].add(
         contrib.reshape(-1, contrib.shape[-1]), mode="drop")
+    deltas = overlay_push_plus(deltas, d_sel, overlay, sel_ids)
     return values, deltas
 
 
 def push_min_one(values: jnp.ndarray, deltas: jnp.ndarray,
                  tiles: jnp.ndarray, nbr_ids: jnp.ndarray,
                  sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
-                 push_scale: jnp.ndarray):
+                 push_scale: jnp.ndarray, overlay: TileOverlay = None):
     """One job, MIN_PLUS semiring (push_scale unused, kept for signature)."""
     del push_scale
+    if overlay is None:
+        overlay = empty_overlay(values.shape[0])
     bn = values.shape[0]
     consumed = _block_mask(sel_ids, sel_mask, bn)[:, None]
     d_sel = jnp.where(consumed, deltas, jnp.inf)[sel_ids]   # [q, Vb]
@@ -71,6 +137,7 @@ def push_min_one(values: jnp.ndarray, deltas: jnp.ndarray,
     (values, deltas), _ = jax.lax.scan(
         body, (values, deltas),
         (jnp.swapaxes(t_sel, 0, 1), jnp.swapaxes(nbr_sel, 0, 1)))
+    values, deltas = overlay_push_min(values, deltas, d_sel, overlay, sel_ids)
     return values, deltas
 
 
@@ -82,16 +149,46 @@ def compute_pairs(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray):
 
 def shared_push_fn(semiring: str, push_one, use_pallas: bool):
     """Stacked-job CAJS push callable (un-jitted): all jobs process the
-    same [q] selection.  The ONE place the pallas-vs-vmap dispatch and the
-    in_axes wiring live — jitted+cached by GraphSession for the host
-    driver, inlined into the compiled superstep by the device driver."""
+    same [q] selection plus the shared overlay (in_axes None — one
+    staging serves every job).  The ONE place the pallas-vs-vmap dispatch
+    and the in_axes wiring live — jitted+cached by GraphSession for the
+    host driver, inlined into the compiled superstep by the device
+    driver."""
     if use_pallas:
         from functools import partial
         from repro.kernels.mj_spmm import ops as mj_ops
-        return partial(mj_ops.push_shared, semiring=semiring)
-    return jax.vmap(push_one, in_axes=(0, 0, None, None, None, None, 0))
+        base = partial(mj_ops.push_shared, semiring=semiring)
+
+        def fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay):
+            # the kernel computes the base-tile push; the overlay ride-along
+            # stays in jnp (bandwidth-bound on state, not adjacency).  The
+            # overlay must see the PRE-consumption deltas, gathered before
+            # the base push zeroes/infs them.
+            if overlay is None or overlay.capacity == 0:
+                return base(values, deltas, tiles, nbr_ids, sel, msk, scales)
+            consumed = _block_mask(sel, msk, values.shape[1])[None, :, None]
+            if semiring == "plus_times":
+                raw = jnp.where(consumed, deltas, 0.0)
+                d_sel = (raw[:, sel, :] * scales[:, None, None]
+                         * msk[None, :, None])              # [J, q, Vb]
+                values, deltas = base(values, deltas, tiles, nbr_ids,
+                                      sel, msk, scales)
+                return values, jax.vmap(
+                    overlay_push_plus, in_axes=(0, 0, None, None))(
+                        deltas, d_sel, overlay, sel)
+            d_sel = jnp.where(consumed, deltas, jnp.inf)[:, sel, :]
+            d_sel = jnp.where(msk[None, :, None] > 0, d_sel, jnp.inf)
+            values, deltas = base(values, deltas, tiles, nbr_ids,
+                                  sel, msk, scales)
+            return jax.vmap(
+                overlay_push_min, in_axes=(0, 0, 0, None, None))(
+                    values, deltas, d_sel, overlay, sel)
+
+        return fn
+    return jax.vmap(push_one, in_axes=(0, 0, None, None, None, None, 0, None))
 
 
 def indep_push_fn(push_one):
-    """Per-job-selection push callable (un-jitted): each job its own [q]."""
-    return jax.vmap(push_one, in_axes=(0, 0, None, None, 0, 0, 0))
+    """Per-job-selection push callable (un-jitted): each job its own [q];
+    the overlay is still the shared view data (in_axes None)."""
+    return jax.vmap(push_one, in_axes=(0, 0, None, None, 0, 0, 0, None))

@@ -52,7 +52,8 @@ from repro.core.scheduler import (TwoLevelScheduler, optimal_queue_length,
                                   PRITER_C)
 from repro.core.do_select import DEFAULT_SAMPLES
 from repro.core.global_q import DEFAULT_ALPHA
-from repro.graph.structure import BlockedGraph, CSRGraph, build_blocked
+from repro.graph.structure import (BlockedGraph, CSRGraph, TileOverlay,
+                                   build_blocked, empty_overlay)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +92,14 @@ class ViewGroup:
     algs: List[Optional[Algorithm]]
     active: np.ndarray        # [cap] bool
     gens: List[int]
+    # evolving-graph state (repro.stream): the bounded per-block delta-COO
+    # staged alongside the tiles (capacity 0 until the first structural
+    # insert), plus host mirrors of the blocked structure that
+    # apply_updates needs to classify edits — built lazily on first use
+    overlay: Optional[TileOverlay] = None
+    pair_slot: Optional[Dict] = None   # {(src block, dst block): slot}
+    ov_used: Optional[np.ndarray] = None   # [B_N, C] bool
+    ov_entry: Optional[Dict] = None    # {(u, v) padded ids: (block, col)}
 
     @property
     def capacity(self) -> int:
@@ -119,7 +128,8 @@ class GraphSession:
     def __init__(self, csr: Optional[CSRGraph] = None, block_size: int = 64,
                  *, capacity: int = 4, c: float = PRITER_C,
                  alpha: float = DEFAULT_ALPHA, samples: int = DEFAULT_SAMPLES,
-                 seed: int = 0, use_pallas: bool = False):
+                 seed: int = 0, use_pallas: bool = False,
+                 overlay_capacity: int = 32):
         self._csr = csr
         self.block_size = block_size
         self._capacity0 = max(1, int(capacity))   # initial per-view capacity
@@ -128,6 +138,13 @@ class GraphSession:
         self._samples = samples
         self._seed = seed
         self.use_pallas = use_pallas
+        # evolving graphs (repro.stream): per-block delta-COO budget a view
+        # grows to on its first structural insert; a full block row triggers
+        # compaction (BlockedGraph rebuilt from the updated CSR)
+        self.overlay_capacity = max(1, int(overlay_capacity))
+        self._dirty_boost: Optional[np.ndarray] = None  # [B_N] pending boost
+        self._stream_pending = {"updates_applied": 0, "dirty_blocks": 0,
+                                "reseed_num": 0, "reseed_den": 0}
         # view registry, populated lazily on submit (insertion-ordered; the
         # order defines the concatenated job-metric layout, see job_index)
         self.groups: Dict[tuple, ViewGroup] = {}
@@ -249,7 +266,8 @@ class GraphSession:
             values=run.values, deltas=run.deltas, push_scale=run.push_scale,
             algs=list(run.algs),
             active=np.ones(run.num_jobs, dtype=bool),
-            gens=[0] * run.num_jobs)
+            gens=[0] * run.num_jobs,
+            overlay=empty_overlay(run.graph.num_blocks))
         return sess
 
     # -- graph / scheduler initialisation ------------------------------------
@@ -289,7 +307,8 @@ class GraphSession:
             values=values, deltas=deltas,
             push_scale=jnp.ones(cap, dtype=jnp.float32),
             algs=[None] * cap, active=np.zeros(cap, dtype=bool),
-            gens=[0] * cap)
+            gens=[0] * cap,
+            overlay=empty_overlay(g.num_blocks))
         self.groups[key] = grp
         return grp
 
@@ -387,6 +406,54 @@ class GraphSession:
         grp.gens[slot] += 1
         return res
 
+    # -- evolving graphs (repro.stream) --------------------------------------
+
+    def apply_updates(self, batch) -> "RunMetrics":
+        """Apply a live edge insert/delete/reweight batch while jobs run.
+
+        The shared CSR is the source of truth: the batch updates it
+        exactly, then every view group absorbs the change — in-place tile
+        edits for block pairs that own a tile slot, the bounded per-block
+        delta-COO overlay for structurally-new pairs (a full overlay row
+        compacts the view: BlockedGraph rebuilt from the updated CSR,
+        bit-identical to a from-scratch build) — and every job's state is
+        invalidated just enough to converge to the NEW graph's fixpoint
+        (see repro.stream.invalidate).  Affected blocks are remembered and
+        injected as priority boosts into the next run()'s DO queues, so
+        the two-level scheduler prioritizes update-affected data for all
+        concurrent jobs at once.  Callable at any superstep between
+        run()/step() calls; returns the accumulated stream counters (also
+        drained into the next run()'s RunMetrics)."""
+        from repro.stream.apply import apply_updates_to_session
+        return apply_updates_to_session(self, batch)
+
+    def compact(self) -> None:
+        """Force compaction of every view: rebuild each BlockedGraph from
+        the updated CSR (bit-identical to a from-scratch build) and empty
+        the overlays.  Happens automatically when an overlay row fills."""
+        from repro.stream.apply import compact_group
+        if self._csr is None:
+            raise ValueError(
+                "compact needs the session-owned CSRGraph (sessions "
+                "adopted from a legacy ConcurrentRun have none)")
+        for grp in self.view_groups():
+            compact_group(self, grp)
+
+    def _consume_dirty_boost(self) -> Optional[np.ndarray]:
+        """[B_N] pending priority injection for update-affected blocks, or
+        None; consumed by the first superstep of the next run."""
+        boost, self._dirty_boost = self._dirty_boost, None
+        return boost
+
+    def _drain_stream_stats(self, metrics) -> None:
+        p = self._stream_pending
+        metrics.updates_applied = p["updates_applied"]
+        metrics.dirty_blocks = p["dirty_blocks"]
+        metrics.reseed_fraction = (p["reseed_num"] / p["reseed_den"]
+                                   if p["reseed_den"] else 0.0)
+        self._stream_pending = {"updates_applied": 0, "dirty_blocks": 0,
+                                "reseed_num": 0, "reseed_den": 0}
+
     # -- jitted primitives (shared by every policy), cached per view ---------
 
     def _device_step_fn(self, policy):
@@ -411,6 +478,7 @@ class GraphSession:
                policy.steps_per_sync,
                tuple(g.key for g in groups),
                tuple(g.capacity for g in groups),
+               tuple(g.overlay.capacity for g in groups),
                self.q, float(self.alpha), int(self.samples),
                self.use_pallas)
         if key not in self._jit_cache:
@@ -477,7 +545,9 @@ class GraphSession:
             raise ValueError("no jobs submitted yet")
         policy = TwoLevel() if policy is None else policy
         self._place(mesh)
-        return policy.run(self, max_supersteps)
+        m = policy.run(self, max_supersteps)
+        self._drain_stream_stats(m)
+        return m
 
     def step(self, policy: Optional[SchedulePolicy] = None) -> RunMetrics:
         """A single superstep under `policy`."""

@@ -93,11 +93,25 @@ def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
     replicated, so each device stages a selected block once per view and
     serves all jobs resident on it.  Groups whose job axis does not divide
     the mesh fall back to replication (identical math), per group — a
-    divisible plus-times group shards even when the min-plus group cannot."""
+    divisible plus-times group shards even when the min-plus group cannot.
+
+    The delta-COO overlay of an evolving view (repro.stream) is SHARED
+    graph data exactly like the tiles, so it replicates with them: each
+    device stages a block's overlay row alongside its tile for its local
+    jobs.  Job state stays sharded across update batches — apply_updates
+    touches values/deltas with .at scatters, which preserve placement."""
+    import dataclasses as _dc
     for grp in session.view_groups():
         grp.values, grp.deltas, grp.push_scale = shard_job_state(
             mesh, grp.values, grp.deltas, grp.push_scale, grp.graph,
             axis_name)
+        if grp.overlay is not None:
+            grp.overlay = _dc.replace(
+                grp.overlay,
+                src_u=_replicated(mesh, grp.overlay.src_u),
+                dst=_replicated(mesh, grp.overlay.dst),
+                w=_replicated(mesh, grp.overlay.w),
+                mask=_replicated(mesh, grp.overlay.mask))
     return session
 
 

@@ -1,12 +1,17 @@
-from repro.graph.structure import CSRGraph, BlockedGraph, build_blocked
-from repro.graph.generators import rmat_graph, uniform_graph, chain_graph, grid_graph
+from repro.graph.structure import (CSRGraph, BlockedGraph, TileOverlay,
+                                   build_blocked, empty_overlay)
+from repro.graph.generators import (rmat_graph, uniform_graph, chain_graph,
+                                    grid_graph, mutation_stream)
 
 __all__ = [
     "CSRGraph",
     "BlockedGraph",
+    "TileOverlay",
     "build_blocked",
+    "empty_overlay",
     "rmat_graph",
     "uniform_graph",
     "chain_graph",
     "grid_graph",
+    "mutation_stream",
 ]

@@ -38,11 +38,28 @@ class CSRGraph:
     @staticmethod
     def from_edges(n: int, src: np.ndarray, dst: np.ndarray,
                    weights: Optional[np.ndarray] = None) -> "CSRGraph":
-        """Build CSR from an edge list; duplicate edges keep the min weight."""
+        """Build CSR from an edge list; duplicate edges keep the min weight.
+
+        Accepts any array-like input (lists, float arrays) and the empty
+        edge list — evolving-graph mutation batches produce both (a batch
+        of pure deletions leaves rows empty), so these are first-class
+        inputs, not error cases.  The min-weight dedupe is idempotent:
+        re-applying a batch that re-inserts an existing edge with a higher
+        weight never raises the stored weight.
+        """
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
         if weights is None:
             weights = np.ones(len(src), dtype=np.float32)
+        weights = np.asarray(weights, dtype=np.float32)
+        if not (len(src) == len(dst) == len(weights)):
+            raise ValueError(
+                f"ragged edge list: {len(src)}/{len(dst)}/{len(weights)}")
+        if len(src) and (src.min() < 0 or src.max() >= n
+                         or dst.min() < 0 or dst.max() >= n):
+            raise ValueError(f"edge endpoints out of range for n={n}")
         # dedupe (src, dst), keep min weight (matters for SSSP correctness)
-        key = src.astype(np.int64) * n + dst.astype(np.int64)
+        key = src * n + dst
         order = np.lexsort((weights, key))
         key, src, dst, weights = key[order], src[order], dst[order], weights[order]
         keep = np.ones(len(key), dtype=bool)
@@ -55,12 +72,31 @@ class CSRGraph:
                         weights=weights.astype(np.float32))
 
     def symmetrized(self) -> "CSRGraph":
-        """Union of edges and reverse edges (for WCC-style algorithms)."""
+        """Union of edges and reverse edges (for WCC-style algorithms).
+
+        Antiparallel pairs (u->v and v->u) collapse to min weight on both
+        directions (from_edges dedupe), so the result is a valid weighted
+        undirected graph even after asymmetric reweights."""
         src = np.repeat(np.arange(self.n, dtype=np.int32), self.out_degree)
         all_src = np.concatenate([src, self.indices])
         all_dst = np.concatenate([self.indices, src])
         all_w = np.concatenate([self.weights, self.weights])
         return CSRGraph.from_edges(self.n, all_src, all_dst, all_w)
+
+    def row(self, u: int) -> tuple:
+        """(dst indices, weights) of u's out-row, dst-ascending."""
+        lo, hi = int(self.indptr[u]), int(self.indptr[u + 1])
+        return self.indices[lo:hi], self.weights[lo:hi]
+
+    def edge_weight(self, u: int, v: int) -> Optional[float]:
+        """Weight of edge (u, v), or None when absent.  O(log deg(u)) —
+        rows are dst-sorted by construction (from_edges sorts by
+        src * n + dst)."""
+        lo, hi = int(self.indptr[u]), int(self.indptr[u + 1])
+        i = lo + int(np.searchsorted(self.indices[lo:hi], v))
+        if i < hi and int(self.indices[i]) == v:
+            return float(self.weights[i])
+        return None
 
 
 @dataclasses.dataclass
@@ -95,10 +131,65 @@ class BlockedGraph:
                    nbr_ids, nbr_mask, tiles, vertex_mask)
 
 
+@dataclasses.dataclass
+class TileOverlay:
+    """Bounded per-block delta-COO staged alongside the base tiles.
+
+    Evolving graphs mutate while jobs run (repro.stream).  Most edge
+    updates edit the dense base tile in place (the (src block, dst block)
+    pair already owns a tile slot); an insert that creates a NEW block
+    pair has nowhere to land in the block-ELL layout, so it goes into
+    this overlay: for each source block, up to `capacity` explicit COO
+    edges.  Staging block b stages its tile row AND its overlay row
+    together (one `tile_loads` unit — the overlay rides along, it is not
+    a second staging), and every push consumes both.  When a block's
+    overlay row fills up, the owning view COMPACTS: the BlockedGraph is
+    rebuilt from the updated CSR (bit-identical to a from-scratch build)
+    and the overlay empties.
+
+    Entries with mask 0 are inert by construction: plus-times adds an
+    exact 0.0, min-plus mins an inf — so a capacity-0 overlay (the state
+    of every never-updated view) leaves all pre-existing runs bitwise
+    unchanged.
+
+      src_u [B_N, C] int32   source vertex offset within the block
+      dst   [B_N, C] int32   destination vertex, global padded index
+      w     [B_N, C] float32 edge weight in the VIEW's weight space
+                             (normalization already applied)
+      mask  [B_N, C] float32 1.0 where the entry is a real edge
+    """
+
+    capacity: int
+    src_u: jnp.ndarray
+    dst: jnp.ndarray
+    w: jnp.ndarray
+    mask: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.src_u, self.dst, self.w, self.mask), (self.capacity,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(aux[0], *leaves)
+
+
+def empty_overlay(num_blocks: int, capacity: int = 0) -> TileOverlay:
+    """All-inert overlay; capacity 0 is the no-updates-yet default."""
+    shape = (num_blocks, capacity)
+    return TileOverlay(
+        capacity=capacity,
+        src_u=jnp.zeros(shape, dtype=jnp.int32),
+        dst=jnp.zeros(shape, dtype=jnp.int32),
+        w=jnp.zeros(shape, dtype=jnp.float32),
+        mask=jnp.zeros(shape, dtype=jnp.float32))
+
+
 import jax.tree_util  # noqa: E402
 
 jax.tree_util.register_pytree_node(
     BlockedGraph, BlockedGraph.tree_flatten, BlockedGraph.tree_unflatten)
+jax.tree_util.register_pytree_node(
+    TileOverlay, TileOverlay.tree_flatten, TileOverlay.tree_unflatten)
 
 
 def build_blocked(csr: CSRGraph, block_size: int, *,

@@ -79,6 +79,8 @@ class ConcurrentServeScheduler:
         self.streams: Dict[int, RequestStream] = {}
         # per-family admitted counts of the most recent schedule_step
         self.last_admitted_by_family: Dict[str, int] = {}
+        # pending dirty-group priority injection (see notify_group_update)
+        self._dirty_boost: np.ndarray | None = None
 
     # batch_budget is mutable between steps (schedule_step recomputes q from
     # it); alpha lives canonically on the scheduler, delegated for the same
@@ -93,6 +95,24 @@ class ConcurrentServeScheduler:
 
     def add_stream(self, stream: RequestStream):
         self.streams[stream.stream_id] = stream
+
+    def notify_group_update(self, groups, boost: float = 1e6) -> None:
+        """Shared-data mutation hook — the serve-layer analogue of the
+        graph engine's dirty-block injection (repro.stream): when the data
+        behind some request groups changes (a prefix cache invalidated, a
+        bucket's snapshot refreshed), those groups' P_mean is boosted on
+        the NEXT schedule_step only, so every stream's waiting requests on
+        updated groups are admitted first.  Groups with no waiting
+        requests are unaffected (the boost multiplies into pairs with
+        n_waiting > 0 only); repeated calls between steps accumulate by
+        max."""
+        vec = np.zeros(self.n_groups)
+        for g in groups:
+            if not 0 <= int(g) < self.n_groups:
+                raise ValueError(f"group {g} out of range")
+            vec[int(g)] = boost
+        self._dirty_boost = (vec if self._dirty_boost is None
+                             else np.maximum(self._dirty_boost, vec))
 
     def _pairs(self, stream: RequestStream):
         """<Node_un, P_mean> per group for one stream (paper Eq. 1)."""
@@ -112,6 +132,9 @@ class ConcurrentServeScheduler:
         p_mean = np.zeros((len(streams), self.n_groups))
         for i, stream in enumerate(streams):
             node_un[i], p_mean[i] = self._pairs(stream)
+        if self._dirty_boost is not None:   # dirty-group injection, one step
+            p_mean = p_mean + self._dirty_boost[None, :] * (node_un > 0)
+            self._dirty_boost = None
         _, gq = self.scheduler.select(node_un, p_mean,
                                       q=max(1, self.batch_budget // 4))
 

@@ -1,0 +1,31 @@
+"""repro.stream — evolving graphs: live edge updates under concurrent jobs.
+
+The paper's jobs arrive continuously against a shared graph; in the real
+scene the GRAPH mutates too.  This subsystem lets a running GraphSession
+absorb edge insert/delete/reweight batches at any superstep
+(`GraphSession.apply_updates`) with incremental recomputation instead of
+restart: a CSR delta overlay staged alongside the base tiles
+(graph.structure.TileOverlay), exact delta-invariant correction for
+plus-times jobs, support-test re-seeding for min-plus jobs, and dirty
+blocks injected as priorities into the existing two-level scheduler —
+across all four policies, both backends, job meshes (overlay replicated,
+job state sharded), and the serve layer (ConcurrentServeScheduler.
+notify_group_update).
+
+See docs/API.md, "Evolving graphs".
+"""
+
+from repro.stream.updates import (INSERT, DELETE, UpdateBatch, apply_to_csr)
+from repro.stream.apply import (DIRTY_BOOST, StreamStats,
+                                apply_updates_to_session, compact_group)
+from repro.stream.invalidate import (adjust_plus_times,
+                                     full_reseed_plus_times,
+                                     reactivate_sources, reseed_min_plus)
+
+__all__ = [
+    "INSERT", "DELETE", "UpdateBatch", "apply_to_csr",
+    "DIRTY_BOOST", "StreamStats", "apply_updates_to_session",
+    "compact_group",
+    "adjust_plus_times", "full_reseed_plus_times", "reactivate_sources",
+    "reseed_min_plus",
+]

@@ -1,0 +1,213 @@
+"""Dirty-state invalidation: re-seed just enough job state after an
+edge-update batch that every job converges to the NEW graph's fixpoint.
+
+Per semiring (the structure-aware split the Si paper argues for —
+delta-driven recomputation touches only the affected region):
+
+PLUS_TIMES — the delta-accumulative iteration conserves the invariant
+    phi = v + (I - A)^{-1} d
+(one push moves mass from d into v and scatters A*d back into d; phi is
+the job's final answer from step 0).  A matrix change A -> A' therefore
+has an EXACT local correction: the new deltas must satisfy
+    v + (I - A')^{-1} d' = (I - A')^{-1} b      (b = the init deltas)
+    =>  d' = b - (I - A') v = d + (A' - A) v    (using the invariant)
+so we adjust d by the sparse difference matrix (A' - A) applied to the
+current values — nonzero only on the updated rows.  Near the old
+fixpoint this leaves large deltas exactly at update-affected vertices:
+the dirty region emerges from the arithmetic, and the existing priority
+machinery schedules it first.  (Symmetrized plus-times views have no
+cheap row diff; `full_reseed_plus_times` recomputes d' = b - v + A'v
+with one matvec over all tiles + overlay — exact, but stages every
+block once.)
+
+MIN_PLUS — monotone fast path vs support-test reseed:
+  * relaxations (insert / reweight-down) cannot invalidate any distance:
+    re-activate the source vertex (deltas[u] = min(deltas[u], values[u]))
+    and let the ordinary push relax the new edge — no reseed;
+  * breaks (delete / reweight-up) may orphan distances downstream.  The
+    affected set is computed per job with the classic support test
+    (Ramalingam–Reps style): a vertex is affected iff it cannot justify
+    its current distance by its init value or by an UNaffected in-
+    neighbour under the new weights.  Strictly positive view weights make
+    the test exact; views with zero-weight edges (WCC's label
+    propagation) fall back to conservative reachability from the broken
+    edges' heads — mutual zero-weight support cycles would otherwise
+    under-invalidate.  Affected vertices re-seed to their init state and
+    their unaffected in-neighbours re-activate, so the region reconverges
+    from correct boundary values.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# plus-times
+# ---------------------------------------------------------------------------
+
+
+def adjust_plus_times(grp, u_idx: np.ndarray, dst_idx: np.ndarray,
+                      dw: np.ndarray) -> None:
+    """d += (A' - A) v via the row-difference COO (padded flat indices).
+
+    Free slots hold all-zero values, so the adjustment is a no-op there —
+    the whole padded job axis is updated in one dispatch."""
+    if len(u_idx) == 0:
+        return
+    cap = grp.values.shape[0]
+    shape = grp.deltas.shape
+    v_flat = grp.values.reshape(cap, -1)
+    d_flat = grp.deltas.reshape(cap, -1)
+    vals = (grp.push_scale[:, None] * v_flat[:, jnp.asarray(u_idx)]
+            * jnp.asarray(dw, jnp.float32)[None, :])
+    grp.deltas = d_flat.at[:, jnp.asarray(dst_idx)].add(vals).reshape(shape)
+
+
+def full_reseed_plus_times(grp) -> None:
+    """Exact d' = b - v + A'v for every active job (symmetrized-view
+    fallback: stages all tiles + overlay once)."""
+    g, ov = grp.graph, grp.overlay
+    bn, vb = g.num_blocks, g.block_size
+
+    def matvec(x, scale):
+        xs = x * scale
+        contrib = jnp.einsum("bv,bkvw->bkw", xs, g.tiles)
+        out = jnp.zeros_like(x).at[g.nbr_ids.reshape(-1)].add(
+            contrib.reshape(-1, vb))
+        if ov.capacity:
+            sel = xs[jnp.arange(bn)[:, None], ov.src_u] * ov.w * ov.mask
+            out = out.reshape(-1).at[ov.dst.reshape(-1)].add(
+                sel.reshape(-1)).reshape(out.shape)
+        return out
+
+    mv = jax.vmap(matvec)(grp.values, grp.push_scale[:, None, None])
+    init_d = [grp.algs[j].init(g)[1] if grp.active[j]
+              else jnp.zeros((bn, vb), jnp.float32)
+              for j in range(grp.capacity)]
+    d_new = jnp.stack(init_d) - grp.values + mv
+    act = jnp.asarray(grp.active)[:, None, None]
+    grp.deltas = jnp.where(act, d_new, grp.deltas)
+
+
+# ---------------------------------------------------------------------------
+# min-plus
+# ---------------------------------------------------------------------------
+
+
+def reactivate_sources(grp, sources: List[int]) -> None:
+    """Monotone fast path: pending = min(pending, current) at `sources`
+    (padded ids) for every job at once (inert slots stay inf)."""
+    if not sources:
+        return
+    vb = grp.graph.block_size
+    s = np.asarray(sorted(set(sources)), dtype=np.int64)
+    bs, us = s // vb, s % vb
+    grp.deltas = grp.deltas.at[:, bs, us].min(grp.values[:, bs, us])
+
+
+def _affected_support(n: int, fwd, rev, dist: np.ndarray,
+                      init_v: np.ndarray, seeds: List[int]) -> np.ndarray:
+    """Support-test affected set (positive weights): [n] bool.
+
+    fwd/rev are (indptr, indices, weights) CSR/CSC of the NEW view.  A
+    candidate re-enters the worklist whenever one of its supporters falls,
+    so the deque order never under-invalidates (the affected set grows
+    monotonically to its fixpoint)."""
+    f_ptr, f_idx, f_w = fwd
+    r_ptr, r_idx, r_w = rev
+    affected = np.zeros(n, dtype=bool)
+    queued = np.zeros(n, dtype=bool)
+    cand = deque()
+    for s in seeds:
+        if not queued[s]:
+            queued[s] = True
+            cand.append(s)
+    while cand:
+        x = cand.popleft()
+        queued[x] = False
+        if affected[x] or not np.isfinite(dist[x]):
+            continue
+        if init_v[x] == dist[x]:     # self-supported (source / own label)
+            continue
+        lo, hi = r_ptr[x], r_ptr[x + 1]
+        ins, ws = r_idx[lo:hi], r_w[lo:hi]
+        ok = (~affected[ins]) & np.isfinite(dist[ins]) \
+            & (dist[ins] + ws == dist[x])
+        if ok.any():
+            continue
+        affected[x] = True
+        lo, hi = f_ptr[x], f_ptr[x + 1]
+        outs, ws = f_idx[lo:hi], f_w[lo:hi]
+        dep = (~affected[outs]) & np.isfinite(dist[outs]) \
+            & (dist[outs] == dist[x] + ws)
+        for y in outs[dep]:
+            if not queued[y]:
+                queued[y] = True
+                cand.append(int(y))
+    return affected
+
+
+def _affected_reachable(n: int, fwd, seeds: List[int]) -> np.ndarray:
+    """Conservative fallback (zero-weight views): everything reachable
+    from the broken edges' heads in the new view."""
+    f_ptr, f_idx, _ = fwd
+    affected = np.zeros(n, dtype=bool)
+    stack = [s for s in set(seeds)]
+    for s in stack:
+        affected[s] = True
+    while stack:
+        x = stack.pop()
+        nbrs = f_idx[f_ptr[x]:f_ptr[x + 1]]
+        new = nbrs[~affected[nbrs]]
+        affected[new] = True
+        stack.extend(int(y) for y in new)
+    return affected
+
+
+def reseed_min_plus(grp, fwd, rev, seeds: List[int],
+                    exact: bool) -> Tuple[int, np.ndarray]:
+    """Per active job: compute the affected set, re-seed it to the job's
+    init state, re-activate its unaffected in-neighbours.  Returns
+    (#re-seeded (job, vertex) pairs, union of affected vertices)."""
+    g = grp.graph
+    n, vb = g.n_real, g.block_size
+    r_ptr, r_idx, _ = rev
+    reseeded = 0
+    union = np.zeros(n, dtype=bool)
+    for j in range(grp.capacity):
+        if not grp.active[j]:
+            continue
+        dist = np.asarray(grp.values[j]).reshape(-1)[:n]
+        init_v, init_d = grp.algs[j].init(g)
+        iv = np.asarray(init_v).reshape(-1)[:n]
+        if exact:
+            aff = _affected_support(n, fwd, rev, dist, iv, seeds)
+        else:
+            aff = _affected_reachable(n, fwd, seeds)
+            aff &= iv != dist    # self-supported state needs no reseed
+        idx = np.nonzero(aff)[0]
+        if len(idx) == 0:
+            continue
+        reseeded += len(idx)
+        union |= aff
+        id_ = np.asarray(init_d).reshape(-1)[:n]
+        bs, us = idx // vb, idx % vb
+        grp.values = grp.values.at[j, bs, us].set(jnp.asarray(iv[idx]))
+        grp.deltas = grp.deltas.at[j, bs, us].set(jnp.asarray(id_[idx]))
+        # boundary re-activation: unaffected in-neighbours of the region
+        # re-push their (still-correct) values into it
+        nbrs = np.unique(np.concatenate(
+            [r_idx[r_ptr[x]:r_ptr[x + 1]] for x in idx]
+            or [np.zeros(0, np.int32)]))
+        nbrs = nbrs[~aff[nbrs]]
+        if len(nbrs):
+            nb, nu = nbrs // vb, nbrs % vb
+            grp.deltas = grp.deltas.at[j, nb, nu].min(
+                grp.values[j, nb, nu])
+    return reseeded, union

@@ -1,0 +1,438 @@
+"""Evolving graphs (repro.stream): live edge updates under running jobs.
+
+Covers the new_subsystem acceptance criteria:
+  * UpdateBatch / apply_to_csr semantics (upsert, ordered ops, in-batch
+    min-weight dedupe) and the CSRGraph hardening satellites;
+  * apply_updates while jobs run: min-plus fixpoints stay BITWISE equal
+    to a fresh session on the rebuilt CSR (insert fast path, delete
+    support-test reseed, WCC conservative reseed), plus-times within
+    tolerance — across host and device backends and a heterogeneous mix;
+  * the delta-COO overlay absorbs structurally-new block pairs, a full
+    overlay row compacts, and compacted tiles are bitwise identical to a
+    from-scratch build;
+  * dirty-block priority injection reaches both drivers and the serve
+    scheduler's notify_group_update analogue;
+  * RunMetrics stream counters.
+"""
+
+import numpy as np
+import pytest
+
+from repro.algorithms import BFS, Katz, PageRank, PersonalizedPageRank, SSSP, WCC
+from repro.algorithms.base import MIN_PLUS
+from repro.core import Fused, GraphSession, TwoLevel
+from repro.graph import chain_graph, mutation_stream, uniform_graph
+from repro.graph.structure import CSRGraph
+from repro.stream import UpdateBatch, apply_to_csr
+
+CSR = uniform_graph(300, 5, seed=8)                       # unweighted
+CSR_W = uniform_graph(200, 5, seed=9, weighted=True, w_max=9.0)
+
+
+def _fresh_fixpoint(csr, algs, seed=0, block=32):
+    sess = GraphSession(csr, block, capacity=2, seed=seed)
+    handles = [sess.submit(a) for a in algs]
+    assert sess.run(TwoLevel(), 50000).converged
+    return sess, [sess.result(h) for h in handles]
+
+
+def _check(algs, got, want):
+    for a, g, w in zip(algs, got, want):
+        if a.semiring == MIN_PLUS:
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-5)
+
+
+# -- CSR hardening satellites ------------------------------------------------
+
+
+def test_from_edges_empty_and_list_inputs():
+    g = CSRGraph.from_edges(5, [], [])
+    assert g.nnz == 0 and g.indptr.tolist() == [0] * 6
+    assert g.symmetrized().nnz == 0
+    assert g.out_degree.tolist() == [0] * 5
+    g2 = CSRGraph.from_edges(5, [0, 1], [1, 2])            # plain lists
+    assert g2.nnz == 2 and g2.weights.dtype == np.float32
+    with pytest.raises(ValueError):
+        CSRGraph.from_edges(5, [0], [5])                   # out of range
+    with pytest.raises(ValueError):
+        CSRGraph.from_edges(5, [0, 1], [1])                # ragged
+
+
+def test_from_edges_duplicate_min_weight_is_idempotent():
+    """Repeated mutation batches re-insert edges; min-dedupe must never
+    raise a stored weight and must be stable under re-application."""
+    g = CSRGraph.from_edges(4, [0, 0, 0, 2], [1, 1, 1, 3],
+                            [3.0, 1.0, 2.0, 5.0])
+    assert g.nnz == 2 and g.edge_weight(0, 1) == 1.0
+    again = CSRGraph.from_edges(
+        4, np.concatenate([np.repeat(np.arange(4), np.diff(g.indptr)),
+                           [0]]),
+        np.concatenate([g.indices, [1]]),
+        np.concatenate([g.weights, [9.0]]))
+    assert again.edge_weight(0, 1) == 1.0                  # min survives
+
+
+def test_symmetrized_antiparallel_min():
+    g = CSRGraph.from_edges(3, [0, 1], [1, 0], [2.0, 7.0])
+    s = g.symmetrized()
+    assert s.edge_weight(0, 1) == 2.0 and s.edge_weight(1, 0) == 2.0
+
+
+# -- UpdateBatch / apply_to_csr ---------------------------------------------
+
+
+def test_apply_to_csr_ordered_upsert_delete():
+    g = CSRGraph.from_edges(4, [0, 1], [1, 2], [2.0, 3.0])
+    b = UpdateBatch.concat([
+        UpdateBatch.inserts([0, 2], [3, 0], [1.5, 4.0]),   # new edges
+        UpdateBatch.inserts([0], [1], [9.0]),              # reweight UP
+        UpdateBatch.deletes([1], [2]),                     # remove
+        UpdateBatch.deletes([3], [0]),                     # absent: no-op
+    ])
+    g2 = apply_to_csr(g, b)
+    assert g2.edge_weight(0, 1) == 9.0                     # upsert replaces
+    assert g2.edge_weight(0, 3) == 1.5
+    assert g2.edge_weight(2, 0) == 4.0
+    assert g2.edge_weight(1, 2) is None
+    assert g.edge_weight(1, 2) == 3.0                      # original intact
+    # delete-then-insert re-creates; in-batch duplicate inserts keep min
+    b2 = UpdateBatch.concat([
+        UpdateBatch.deletes([0], [1]),
+        UpdateBatch.inserts([0, 0], [1, 1], [5.0, 4.0]),
+    ])
+    assert apply_to_csr(g2, b2).edge_weight(0, 1) == 4.0
+    with pytest.raises(ValueError):
+        apply_to_csr(g, UpdateBatch.inserts([0], [99]))
+
+
+# -- incremental recomputation matches fresh sessions ------------------------
+
+
+@pytest.mark.parametrize(
+    "policy",
+    [TwoLevel(), TwoLevel(backend="device", steps_per_sync=4), Fused()],
+    ids=["host", "device_k4", "fused"])
+def test_updates_while_running_match_rebuilt_fixpoints(policy):
+    """Insert + delete batches at arbitrary supersteps: every job ends at
+    the fixpoint of the FINAL graph (min-plus bitwise)."""
+    algs = [PageRank(), SSSP(source=0)]
+    sess = GraphSession(CSR, 32, capacity=2, seed=0)
+    handles = [sess.submit(a) for a in algs]
+    sess.run(policy, max_supersteps=7)          # mid-convergence
+    batches = mutation_stream(CSR, 2, inserts_per_batch=6,
+                              deletes_per_batch=3, seed=3)
+    csr_k = CSR
+    for b in batches:
+        sess.apply_updates(b)
+        sess.run(policy, max_supersteps=5)      # updates land mid-run too
+        csr_k = apply_to_csr(csr_k, b)
+    assert sess.run(policy, 50000).converged
+    _, ref = _fresh_fixpoint(csr_k, algs)
+    _check(algs, [sess.result(h) for h in handles], ref)
+
+
+def test_min_plus_insert_fast_path_is_exact_and_cheap():
+    """A weight-lowering insert re-activates only the source — no reseed —
+    and still lands on the rebuilt CSR's exact distances."""
+    sess = GraphSession(CSR_W, 32, capacity=1, seed=1)
+    h = sess.submit(SSSP(source=0))
+    assert sess.run(TwoLevel(), 50000).converged
+    far = int(np.argmax(np.where(np.isfinite(sess.result(h)),
+                                 sess.result(h), -1)))
+    b = UpdateBatch.inserts([0], [far], [0.5])  # shortcut from the source
+    stats = sess.apply_updates(b)
+    assert stats.reseed_fraction == 0.0         # monotone: nothing reseeded
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(CSR_W, b), [SSSP(source=0)],
+                             seed=1)
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+    assert sess.result(h)[far] == 0.5
+
+
+def test_min_plus_delete_reseeds_support_set_exactly():
+    sess = GraphSession(CSR_W, 32, capacity=2, seed=2)
+    h0 = sess.submit(SSSP(source=0))
+    h1 = sess.submit(SSSP(source=17))
+    assert sess.run(TwoLevel(), 50000).converged
+    # delete several existing edges (possibly on shortest paths)
+    rng = np.random.default_rng(0)
+    src_all = np.repeat(np.arange(CSR_W.n), np.diff(CSR_W.indptr))
+    idx = rng.choice(len(src_all), 6, replace=False)
+    b = UpdateBatch.deletes(src_all[idx], CSR_W.indices[idx])
+    stats = sess.apply_updates(b)
+    assert stats.dirty_blocks > 0
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(CSR_W, b),
+                             [SSSP(source=0), SSSP(source=17)], seed=2)
+    np.testing.assert_array_equal(sess.result(h0), ref[0])
+    np.testing.assert_array_equal(sess.result(h1), ref[1])
+
+
+def test_wcc_delete_splits_component_conservative_reseed():
+    """Zero-weight label propagation has no support order — deletes fall
+    back to conservative reachability reseed and still match exactly."""
+    csr = chain_graph(96)                       # ring: one component
+    sess = GraphSession(csr, 16, capacity=1, seed=0)
+    h = sess.submit(WCC())
+    assert sess.run(TwoLevel(), 50000).converged
+    assert sess.result(h).max() == 0.0          # single component
+    # cutting one directed ring edge leaves the (symmetrized) component
+    # intact; cutting two splits the undirected cycle in two
+    b = UpdateBatch.deletes([10, 50], [11, 51])
+    sess.apply_updates(b)
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(csr, b), [WCC()], block=16)
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+    assert len(np.unique(sess.result(h))) == 2  # two components now
+
+
+def test_plus_times_weighted_reweight_exact_correction():
+    """Weighted Katz (raw weights, contractive alpha) absorbs reweights/
+    deletes/inserts via the exact delta-invariant correction.  (PageRank
+    stays off weighted graphs — out-degree normalization is only
+    stochastic for unit weights, the repo-wide convention.)"""
+    algs = [Katz(alpha=0.01)]
+    sess = GraphSession(CSR_W, 32, capacity=2, seed=0)
+    handles = [sess.submit(a) for a in algs]
+    assert sess.run(TwoLevel(), 50000).converged
+    src_all = np.repeat(np.arange(CSR_W.n), np.diff(CSR_W.indptr))
+    b = UpdateBatch.concat([
+        UpdateBatch.inserts(src_all[[3, 40]], CSR_W.indices[[3, 40]],
+                            [0.25, 8.0]),       # reweights of existing edges
+        UpdateBatch.deletes(src_all[[80]], CSR_W.indices[[80]]),
+        UpdateBatch.inserts([5], [190], [2.0]),  # structural insert
+    ])
+    sess.apply_updates(b)
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(CSR_W, b), algs)
+    _check(algs, [sess.result(h) for h in handles], ref)
+
+
+def test_pagerank_degree_rescale_on_inserts_and_deletes():
+    """Unit-weight PageRank: inserts/deletes change out-degrees, so the
+    whole source row rescales (deg_old/deg_new) and the delta correction
+    covers every entry of the changed rows."""
+    algs = [PageRank(), PersonalizedPageRank(source=7)]
+    sess = GraphSession(CSR, 32, capacity=2, seed=0)
+    handles = [sess.submit(a) for a in algs]
+    assert sess.run(TwoLevel(), 50000).converged
+    src_all = np.repeat(np.arange(CSR.n), np.diff(CSR.indptr))
+    b = UpdateBatch.concat([
+        UpdateBatch.inserts([7, 7, 100], [33, 231, 5]),   # degree changes
+        UpdateBatch.deletes(src_all[[10, 120]], CSR.indices[[10, 120]]),
+    ])
+    sess.apply_updates(b)
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(CSR, b), algs)
+    _check(algs, [sess.result(h) for h in handles], ref)
+
+
+def test_heterogeneous_session_absorbs_update_stream():
+    """The full mix — two PT views + two MP views over one shared CSR —
+    under a multi-batch stream, one view compacted mid-stream."""
+    algs = [PageRank(), PersonalizedPageRank(source=7), SSSP(source=0),
+            BFS(source=3)]
+    sess = GraphSession(CSR, 32, capacity=2, seed=4)
+    handles = [sess.submit(a) for a in algs]
+    assert sess.run(TwoLevel(), 50000).converged
+    csr_k = CSR
+    for i, b in enumerate(mutation_stream(CSR, 3, inserts_per_batch=5,
+                                          deletes_per_batch=2, seed=5)):
+        sess.apply_updates(b)
+        if i == 1:
+            sess.compact()                      # explicit mid-stream compact
+        assert sess.run(TwoLevel(), 50000).converged
+        csr_k = apply_to_csr(csr_k, b)
+    _, ref = _fresh_fixpoint(csr_k, algs, seed=4)
+    _check(algs, [sess.result(h) for h in handles], ref)
+
+
+# -- overlay + compaction ----------------------------------------------------
+
+
+def test_overlay_absorbs_new_block_pair_and_compaction_is_bitwise():
+    csr = chain_graph(256)
+    sess = GraphSession(csr, 32, capacity=1, seed=0, overlay_capacity=4)
+    h = sess.submit(SSSP(source=0))
+    assert sess.run(TwoLevel(), 50000).converged
+    b = UpdateBatch.inserts([5], [200])         # block pair (0, 6): no slot
+    sess.apply_updates(b)
+    grp = sess.view_groups()[0]
+    assert grp.overlay.capacity == 4            # grew on first need
+    assert grp.ov_entry == {(5, 200): (0, 0)}
+    assert sess.run(TwoLevel(), 50000).converged
+    ref_sess, ref = _fresh_fixpoint(apply_to_csr(csr, b), [SSSP(source=0)])
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+    # deleting the overlay edge clears its slot
+    sess.apply_updates(UpdateBatch.deletes([5], [200]))
+    assert grp.ov_entry == {} and not grp.ov_used.any()
+    sess.apply_updates(b)                       # and it can come back
+    assert sess.run(TwoLevel(), 50000).converged
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+    sess.compact()
+    grp = sess.view_groups()[0]
+    assert grp.overlay.capacity == 0
+    for a_s, a_r in (("tiles", "tiles"), ("nbr_ids", "nbr_ids"),
+                     ("nbr_mask", "nbr_mask")):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(grp.graph, a_s)),
+            np.asarray(getattr(ref_sess.view_groups()[0].graph, a_r)))
+    assert sess.run(TwoLevel(), 50000).converged
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+
+
+def test_overlay_slot_reclaimed_in_same_batch():
+    """A slot freed by a delete and reclaimed by an insert in the SAME
+    batch must apply the insert (duplicate scatter indices are deduped;
+    an unspecified-order scatter could let the stale clear win)."""
+    csr = chain_graph(256)
+    sess = GraphSession(csr, 32, capacity=1, seed=0, overlay_capacity=1)
+    h = sess.submit(SSSP(source=0))
+    assert sess.run(TwoLevel(), 50000).converged
+    sess.apply_updates(UpdateBatch.inserts([5], [200]))   # fills (0, 0)
+    grp = sess.view_groups()[0]
+    assert grp.ov_entry == {(5, 200): (0, 0)}
+    b = UpdateBatch.concat([UpdateBatch.deletes([5], [200]),
+                            UpdateBatch.inserts([6], [210])])
+    sess.apply_updates(b)                       # reclaims slot (0, 0)
+    assert grp.ov_entry == {(6, 210): (0, 0)}
+    assert float(grp.overlay.mask[0, 0]) == 1.0  # insert won, not the clear
+    assert int(grp.overlay.dst[0, 0]) == 210
+    assert sess.run(TwoLevel(), 50000).converged
+    csr_k = apply_to_csr(apply_to_csr(csr, UpdateBatch.inserts([5], [200])),
+                         b)
+    _, ref = _fresh_fixpoint(csr_k, [SSSP(source=0)])
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+
+
+def test_overlay_overflow_triggers_compaction():
+    csr = chain_graph(256)
+    sess = GraphSession(csr, 32, capacity=1, seed=0, overlay_capacity=2)
+    h = sess.submit(SSSP(source=0))
+    assert sess.run(TwoLevel(), 50000).converged
+    # 3 structurally-new pairs from block 0 > capacity 2 -> compact
+    b = UpdateBatch.inserts([1, 2, 3], [100, 150, 200])
+    stats = sess.apply_updates(b)
+    assert stats.compacted_views == 1
+    grp = sess.view_groups()[0]
+    assert grp.overlay.capacity == 0            # emptied by compaction
+    assert grp.graph.max_nbr_blocks > 2         # rebuilt layout holds them
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(csr, b), [SSSP(source=0)])
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+
+
+# -- scheduling integration --------------------------------------------------
+
+
+def test_dirty_boost_reaches_both_drivers_and_is_consumed():
+    for policy in (TwoLevel(), Fused()):
+        sess = GraphSession(CSR, 32, capacity=1, seed=0)
+        h = sess.submit(SSSP(source=0))
+        assert sess.run(policy, 50000).converged
+        sess.apply_updates(UpdateBatch.inserts([0], [250], [1.0]))
+        assert sess._dirty_boost is not None
+        assert (sess._dirty_boost > 0).any()
+        m = sess.step(policy)                   # first superstep consumes it
+        assert sess._dirty_boost is None
+        assert m.updates_applied == 1 and m.dirty_blocks > 0
+        m2 = sess.run(policy, 50000)
+        assert m2.converged and m2.updates_applied == 0
+        del h
+
+
+def test_stream_metrics_counters():
+    sess = GraphSession(CSR_W, 32, capacity=1, seed=0)
+    sess.submit(SSSP(source=0))
+    assert sess.run(TwoLevel(), 50000).converged
+    src_all = np.repeat(np.arange(CSR_W.n), np.diff(CSR_W.indptr))
+    sess.apply_updates(UpdateBatch.deletes(src_all[[0]], CSR_W.indices[[0]]))
+    sess.apply_updates(UpdateBatch.inserts([1], [2], [0.1]))
+    m = sess.run(TwoLevel(), 50000)
+    assert m.converged
+    assert m.updates_applied == 2               # accumulated across applies
+    assert m.dirty_blocks >= 1
+    assert 0.0 <= m.reseed_fraction <= 1.0
+
+
+def test_apply_updates_requires_session_csr():
+    from repro.core import ConcurrentEngine, make_run
+    eng = ConcurrentEngine(make_run([PageRank()], CSR, 32), seed=0)
+    with pytest.raises(ValueError, match="CSRGraph"):
+        eng.session.apply_updates(UpdateBatch.inserts([0], [1]))
+    sess = GraphSession(CSR, 32)
+    with pytest.raises(TypeError):
+        sess.apply_updates([(0, 1, 1.0)])
+
+
+def test_apply_updates_before_first_submit():
+    sess = GraphSession(CSR, 32, capacity=1, seed=0)
+    b = UpdateBatch.inserts([0], [250], [1.0])
+    stats = sess.apply_updates(b)               # no views yet: CSR advances
+    assert stats.updates_applied == 1 and stats.dirty_blocks == 0
+    h = sess.submit(SSSP(source=0))             # view built from updated CSR
+    assert sess.run(TwoLevel(), 50000).converged
+    _, ref = _fresh_fixpoint(apply_to_csr(CSR, b), [SSSP(source=0)])
+    np.testing.assert_array_equal(sess.result(h), ref[0])
+
+
+@pytest.mark.slow
+def test_pallas_push_consumes_overlay():
+    """The kernel-backed shared push applies the overlay ride-along in
+    jnp around the pallas base push — min-plus stays bitwise equal to the
+    vmap path under a structural insert."""
+    csr = chain_graph(128)
+    b = UpdateBatch.inserts([3], [100])         # new block pair for Vb=32
+    results = {}
+    for pallas in (False, True):
+        sess = GraphSession(csr, 32, capacity=1, seed=0, use_pallas=pallas)
+        h = sess.submit(SSSP(source=0))
+        assert sess.run(TwoLevel(), 50000).converged
+        sess.apply_updates(b)
+        assert sess.view_groups()[0].overlay.capacity > 0
+        assert sess.run(TwoLevel(), 50000).converged
+        results[pallas] = sess.result(h)
+    np.testing.assert_array_equal(results[True], results[False])
+    _, ref = _fresh_fixpoint(apply_to_csr(csr, b), [SSSP(source=0)])
+    np.testing.assert_array_equal(results[True], ref[0])
+    # plus-times arm of the wrapper (overlay contribution from the
+    # pre-consumption deltas): same insert under PageRank
+    pt = {}
+    for pallas in (False, True):
+        sess = GraphSession(csr, 32, capacity=1, seed=0, use_pallas=pallas)
+        h = sess.submit(PageRank())
+        assert sess.run(TwoLevel(), 50000).converged
+        sess.apply_updates(b)
+        assert sess.run(TwoLevel(), 50000).converged
+        pt[pallas] = sess.result(h)
+    np.testing.assert_allclose(pt[True], pt[False], rtol=1e-5, atol=1e-7)
+    _, ref_pt = _fresh_fixpoint(apply_to_csr(csr, b), [PageRank()])
+    np.testing.assert_allclose(pt[True], ref_pt[0], rtol=1e-3, atol=1e-5)
+
+
+def test_serve_dirty_group_injection():
+    """The serve-layer analogue: notify_group_update front-runs admission
+    for streams waiting on updated groups, for exactly one step."""
+    from repro.serve.concurrent import (ConcurrentServeScheduler, Request,
+                                        RequestStream)
+
+    def build():
+        sched = ConcurrentServeScheduler(n_groups=16, batch_budget=2, seed=0)
+        s = RequestStream(0)
+        for g in range(16):                     # one request per group,
+            s.add(Request(0, g, urgency=16 - g, tokens_left=1))
+        sched.add_stream(s)                     # group 0 most urgent
+        return sched
+
+    base = build()
+    admitted = base.schedule_step()
+    assert all(r.group != 13 for r in admitted)  # low urgency: not admitted
+    boosted = build()
+    boosted.notify_group_update([13])
+    admitted = boosted.schedule_step()
+    assert any(r.group == 13 for r in admitted)  # dirty group front-runs
+    assert boosted._dirty_boost is None          # consumed
+    with pytest.raises(ValueError):
+        boosted.notify_group_update([99])

@@ -1,0 +1,128 @@
+"""Property-based overlay/compaction correctness for evolving graphs.
+
+The tentpole invariant of repro.stream: after ANY sequence of update
+batches absorbed incrementally (tile edits + delta-COO overlay + job-state
+invalidation), compact-then-run lands every job on the fixpoint of a
+FRESH session built on the rebuilt CSR — bitwise for min-plus (the
+fixpoint is schedule-invariant and compaction makes the tiles bit-exact),
+within the plus-times tolerance — across all four schedule policies on
+BOTH backends.  Random small CSRs × heterogeneous job mixes × random
+mutation streams probe it; the wider policy × backend grid is heavy and
+runs in the slow job.
+
+Runs under the real `hypothesis` when installed, else the deterministic
+shim in tests/_hypothesis_shim.py (registered by conftest).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.algorithms import BFS, Katz, PageRank, PersonalizedPageRank, SSSP
+from repro.algorithms.base import MIN_PLUS
+from repro.core import AllBlocks, Fused, GraphSession, Independent, TwoLevel
+from repro.graph import mutation_stream
+from repro.graph.structure import CSRGraph
+from repro.stream import apply_to_csr
+
+pytestmark = pytest.mark.slow
+
+BLOCK = 16
+
+
+def _random_csr(seed: int, n: int, deg: int, weighted: bool) -> CSRGraph:
+    rng = np.random.default_rng(seed)
+    m = n * deg
+    src = rng.integers(0, n, m).astype(np.int32)
+    dst = rng.integers(0, n, m).astype(np.int32)
+    w = (rng.uniform(0.5, 4.0, m).astype(np.float32) if weighted else None)
+    return CSRGraph.from_edges(n, src, dst, w)
+
+
+def _job_mix(rng: np.random.Generator, n: int, weighted: bool):
+    """2-3 jobs across both families (PageRank/PPR only on unit weights,
+    as in test_policy_properties)."""
+    pool = [
+        lambda: Katz(alpha=0.02),
+        lambda: SSSP(source=int(rng.integers(n))),
+        lambda: BFS(source=int(rng.integers(n))),
+    ]
+    if not weighted:
+        pool += [
+            lambda: PageRank(damping=float(rng.uniform(0.6, 0.9))),
+            lambda: PersonalizedPageRank(source=int(rng.integers(n))),
+        ]
+    k = int(rng.integers(2, 4))
+    return [pool[int(rng.integers(len(pool)))]() for _ in range(k)]
+
+
+def _assert_same_fixpoint(alg, got, want):
+    if alg.semiring == MIN_PLUS:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+
+def _evolve_and_compare(csr, algs, policy, batches, seed, *,
+                        overlay_capacity=2):
+    """Drive `policy` through the stream incrementally, compact, reconverge,
+    and compare against a fresh session on the rebuilt CSR."""
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=seed,
+                        overlay_capacity=overlay_capacity)
+    handles = [sess.submit(a) for a in algs]
+    sess.run(policy, max_supersteps=6)            # updates land mid-run
+    csr_k = csr
+    for b in batches:
+        sess.apply_updates(b)
+        sess.run(policy, max_supersteps=4)
+        csr_k = apply_to_csr(csr_k, b)
+    sess.compact()
+    assert sess.run(policy, 50000).converged, policy.name
+
+    fresh = GraphSession(csr_k, BLOCK, capacity=2, seed=seed)
+    fh = [fresh.submit(a) for a in algs]
+    assert fresh.run(TwoLevel(), 50000).converged
+    # compaction == from-scratch build, bit for bit
+    for g_s, g_f in zip(sess.view_groups(), fresh.view_groups()):
+        assert g_s.overlay.capacity == 0
+        np.testing.assert_array_equal(np.asarray(g_s.graph.tiles),
+                                      np.asarray(g_f.graph.tiles))
+        np.testing.assert_array_equal(np.asarray(g_s.graph.nbr_ids),
+                                      np.asarray(g_f.graph.nbr_ids))
+    for alg, h, f in zip(algs, handles, fh):
+        _assert_same_fixpoint(alg, sess.result(h), fresh.result(f))
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([24, 40, 56]),
+       deg=st.integers(1, 4), weighted=st.booleans())
+@settings(max_examples=6, deadline=None)
+def test_compact_then_run_matches_fresh_session(seed, n, deg, weighted):
+    csr = _random_csr(seed, n, deg, weighted)
+    rng = np.random.default_rng(seed + 1)
+    algs = _job_mix(rng, n, weighted)
+    batches = mutation_stream(csr, int(rng.integers(1, 4)),
+                              inserts_per_batch=4, deletes_per_batch=2,
+                              seed=seed + 2, weighted=weighted, w_max=4.0)
+    _evolve_and_compare(csr, algs, TwoLevel(), batches, seed % 97)
+
+
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([24, 40]),
+       deg=st.integers(1, 3), weighted=st.booleans())
+@settings(max_examples=3, deadline=None)
+def test_compact_then_run_across_policies_and_backends(seed, n, deg,
+                                                       weighted):
+    """The heavy grid: every policy × host/device absorbs the SAME stream
+    to the same rebuilt-CSR fixpoint."""
+    csr = _random_csr(seed, n, deg, weighted)
+    rng = np.random.default_rng(seed + 1)
+    algs = _job_mix(rng, n, weighted)
+    batches = mutation_stream(csr, 2, inserts_per_batch=3,
+                              deletes_per_batch=2, seed=seed + 2,
+                              weighted=weighted, w_max=4.0)
+    grid = [TwoLevel(), Independent(), AllBlocks(),
+            TwoLevel(backend="device", steps_per_sync=2),
+            Independent(backend="device", steps_per_sync=1),
+            AllBlocks(backend="device", steps_per_sync=4),
+            Fused()]
+    for policy in grid:
+        _evolve_and_compare(csr, algs, policy, batches, seed % 89)
