@@ -47,13 +47,23 @@
                              (rebuilt tiles bitwise equal to from-scratch,
                              min-plus fixpoints bitwise equal).
 
+  fig_trace                : observability overhead (repro.obs) — the same
+                             hetero + streaming workload with telemetry off
+                             vs on, host and device_inf backends; asserts
+                             the device 1-sync path stays 1-sync with a
+                             full per-superstep series at < 10% overhead,
+                             and exports a schema-validated Chrome/Perfetto
+                             trace alongside the JSON records.
+
 Prints ``name,us_per_call,derived`` CSV rows.  Modes are selectable:
 ``python benchmarks/run.py [mode ...]`` (default: all).  ``--json [DIR]``
 additionally writes each mode's rows as machine-readable records to
-``DIR/BENCH_<mode>.json`` (field names parsed from the derived column);
-with no DIR it defaults to the REPO ROOT, where the committed
-``BENCH_*.json`` records persist the perf trajectory PR over PR (CI
-archives the same files as artifacts).
+``DIR/BENCH_<mode>.json`` (``row()`` keyword fields serialize directly —
+no string parsing); with no DIR it defaults to the REPO ROOT, where the
+committed ``BENCH_*.json`` records persist the perf trajectory PR over PR
+(CI archives the same files as artifacts).  Every record uniformly carries
+``host_syncs`` and the stream counters ``updates_applied`` /
+``dirty_blocks`` / ``reseed_fraction`` (0 for modes that run no session).
 """
 
 import argparse
@@ -71,31 +81,38 @@ from repro.core.priority import cbp_key_sort
 from repro.graph import rmat_graph, uniform_graph
 
 ROWS = []
-RECORDS = {}          # mode -> [ {name, us_per_call, **derived fields} ]
+RECORDS = {}          # mode -> [ {name, us_per_call, **fields} ]
 _CURRENT_MODE = None  # set by main() around each mode call
+_JSON_DIR = None      # --json destination; side artifacts (traces) land here
+
+# every JSON record carries these, 0 when the mode runs no session
+UNIFORM_COUNTERS = ("host_syncs", "updates_applied", "dirty_blocks",
+                    "reseed_fraction")
 
 
-def _maybe_num(v: str):
-    try:
-        return int(v)
-    except ValueError:
-        try:
-            f = float(v)
-        except ValueError:
-            return v
-        # "inf"/"nan" stay strings: json.dump's Infinity is not valid JSON
-        return f if math.isfinite(f) else v
+def row(name: str, us: float, **fields):
+    """One benchmark row: CSV to stdout + a typed JSON record.
 
-
-def row(name: str, us: float, derived: str):
+    Field values go into the JSON record as-is (pass ints/floats, or a
+    pre-formatted string like "1.54x" where the suffix is the point)."""
+    derived = ";".join(f"{k}={v}" for k, v in fields.items())
     ROWS.append(f"{name},{us:.1f},{derived}")
     print(ROWS[-1], flush=True)
-    rec = {"name": name, "us_per_call": round(us, 1)}
-    for kv in derived.split(";"):
-        if "=" in kv:
-            k, v = kv.split("=", 1)
-            rec[k] = _maybe_num(v)
+    rec = {"name": name, "us_per_call": round(us, 1), **fields}
+    for k in UNIFORM_COUNTERS:
+        rec.setdefault(k, 0)
     RECORDS.setdefault(_CURRENT_MODE, []).append(rec)
+
+
+def _counters(*ms):
+    """The uniform RunMetrics counters of the run(s) a row measures,
+    summed over runs (reseed_fraction: mean)."""
+    n = max(len(ms), 1)
+    return {"host_syncs": sum(m.host_syncs for m in ms),
+            "updates_applied": sum(m.updates_applied for m in ms),
+            "dirty_blocks": sum(m.dirty_blocks for m in ms),
+            "reseed_fraction": round(
+                sum(m.reseed_fraction for m in ms) / n, 6)}
 
 
 def _jobs(n):
@@ -114,8 +131,9 @@ def fig4_5_memory_redundancy():
                                seed=0).run_independent(50000)
         assert m_s.converged and m_i.converged
         row(f"fig4_redundancy_j{n}", t_s * 1e6 / max(m_s.supersteps, 1),
-            f"shared_loads={m_s.tile_loads};indep_loads={m_i.tile_loads};"
-            f"saving={m_i.tile_loads / max(m_s.tile_loads, 1):.2f}x")
+            shared_loads=m_s.tile_loads, indep_loads=m_i.tile_loads,
+            saving=f"{m_i.tile_loads / max(m_s.tile_loads, 1):.2f}x",
+            **_counters(m_s))
 
 
 def fig_convergence():
@@ -129,9 +147,10 @@ def fig_convergence():
                                seed=0).run_all_blocks(50000)
         assert m_p.converged and m_a.converged
         row(f"fig_convergence_j{n}", t_p * 1e6 / max(m_p.supersteps, 1),
-            f"prio_pushes={m_p.job_block_pushes};"
-            f"sync_pushes={m_a.job_block_pushes};"
-            f"work_saving={m_a.job_block_pushes / max(m_p.job_block_pushes, 1):.2f}x")
+            prio_pushes=m_p.job_block_pushes,
+            sync_pushes=m_a.job_block_pushes,
+            work_saving=(f"{m_a.job_block_pushes / max(m_p.job_block_pushes, 1):.2f}x"),
+            **_counters(m_p))
 
 
 def fig_throughput():
@@ -147,7 +166,8 @@ def fig_throughput():
         dt = time.time() - t0
         assert m.converged
         row(f"fig_throughput_{name}", dt * 1e6 / n,
-            f"jobs_per_s={n / dt:.2f};supersteps={m.supersteps}")
+            jobs_per_s=f"{n / dt:.2f}", supersteps=m.supersteps,
+            **_counters(m))
 
 
 def tab_do_cost():
@@ -165,8 +185,9 @@ def tab_do_cost():
         t_full = time.time() - t0
         overlap = len(set(sel.tolist()) & set(full.tolist())) / max(len(full), 1)
         row(f"tab_do_cost_B{bn}", t_do * 1e6,
-            f"full_sort_us={t_full * 1e6:.0f};"
-            f"speedup={t_full / max(t_do, 1e-9):.1f}x;top_q_overlap={overlap:.2f}")
+            full_sort_us=round(t_full * 1e6),
+            speedup=f"{t_full / max(t_do, 1e-9):.1f}x",
+            top_q_overlap=round(overlap, 2))
 
 
 def tab_kernel():
@@ -187,11 +208,11 @@ def tab_kernel():
             out.block_until_ready()
         dt = (time.time() - t0) / 3
         row(f"tab_kernel_{name}", dt * 1e6,
-            f"shape=q{q}k{k}j{j}vb{vb};note=interpret-mode-correctness")
+            shape=f"q{q}k{k}j{j}vb{vb}", note="interpret-mode-correctness")
     err = float(jnp.max(jnp.abs(
         mj_spmm(d, t, "plus_times", interpret=True)
         - mj_spmm_ref(d, t, "plus_times"))))
-    row("tab_kernel_allclose", 0.0, f"max_abs_err={err:.2e}")
+    row("tab_kernel_allclose", 0.0, max_abs_err=f"{err:.2e}")
 
 
 def fig_scaling():
@@ -221,9 +242,10 @@ def fig_scaling():
         else:
             np.testing.assert_array_equal(eng.results(), ref)
         row(f"fig_scaling_d{d}", dt * 1e6 / max(m.supersteps, 1),
-            f"devices={d};jobs={n_jobs};supersteps={m.supersteps};"
-            f"tile_loads_per_device={m.tile_loads};"
-            f"job_pushes_per_device={m.job_block_pushes / d:.0f}")
+            devices=d, jobs=n_jobs, supersteps=m.supersteps,
+            tile_loads_per_device=m.tile_loads,
+            job_pushes_per_device=round(m.job_block_pushes / d),
+            **_counters(m))
 
 
 def fig_arrival():
@@ -240,16 +262,18 @@ def fig_arrival():
     t0 = time.time()
     sess = GraphSession(csr, 64, capacity=n_arrivals, seed=0)
     policy = TwoLevel()
-    handles, s_loads, s_steps = [], 0, 0
+    handles, s_loads, s_steps, s_ms = [], 0, 0, []
     for alg in algs:
         handles.append(sess.submit(alg))
         m = sess.run(policy, max_supersteps=gap)
         s_loads += m.tile_loads
         s_steps += m.supersteps
+        s_ms.append(m)
     m = sess.run(policy, 50000)
     assert m.converged
     s_loads += m.tile_loads
     s_steps += m.supersteps
+    s_ms.append(m)
     t_sess = time.time() - t0
 
     t0 = time.time()
@@ -263,10 +287,12 @@ def fig_arrival():
     t_restart = time.time() - t0
 
     row("fig_arrival", t_sess * 1e6 / max(s_steps, 1),
-        f"session_tile_loads={s_loads};restart_tile_loads={r_loads};"
-        f"session_supersteps={s_steps};restart_supersteps={r_steps};"
-        f"session_makespan_s={t_sess:.2f};restart_makespan_s={t_restart:.2f};"
-        f"load_saving={r_loads / max(s_loads, 1):.2f}x")
+        session_tile_loads=s_loads, restart_tile_loads=r_loads,
+        session_supersteps=s_steps, restart_supersteps=r_steps,
+        session_makespan_s=round(t_sess, 2),
+        restart_makespan_s=round(t_restart, 2),
+        load_saving=f"{r_loads / max(s_loads, 1):.2f}x",
+        **_counters(*s_ms))
 
 
 def fig_hetero():
@@ -299,6 +325,7 @@ def fig_hetero():
         session (both sessions still live through every global gap)."""
         sessions = {}
         loads = steps = 0
+        ms = []
         t0 = time.time()
         for wave in waves:
             for alg in wave:
@@ -311,12 +338,14 @@ def fig_hetero():
                 m = s.run(policy_cls(), max_supersteps=gap, mesh=mesh)
                 loads += m.tile_loads
                 steps += m.supersteps
+                ms.append(m)
         for s in sessions.values():
             m = s.run(policy_cls(), 50000, mesh=mesh)
             assert m.converged
             loads += m.tile_loads
             steps += m.supersteps
-        return loads, steps, time.time() - t0
+            ms.append(m)
+        return loads, steps, time.time() - t0, ms
 
     meshes = [("", None)]
     if len(jax.devices()) > 1:
@@ -324,13 +353,14 @@ def fig_hetero():
                        make_job_mesh(len(jax.devices()))))
     for policy_cls, pname in ((TwoLevel, "two_level"), (Fused, "fused")):
         for tag, mesh in meshes:
-            h_loads, h_steps, h_t = drive(False, policy_cls, mesh)
-            s_loads, s_steps, s_t = drive(True, policy_cls, mesh)
+            h_loads, h_steps, h_t, h_ms = drive(False, policy_cls, mesh)
+            s_loads, s_steps, s_t, _ = drive(True, policy_cls, mesh)
             assert h_loads < s_loads, (h_loads, s_loads)
             row(f"fig_hetero_{pname}{tag}", h_t * 1e6 / max(h_steps, 1),
-                f"hetero_tile_loads={h_loads};split_tile_loads={s_loads};"
-                f"hetero_supersteps={h_steps};split_supersteps={s_steps};"
-                f"saving={s_loads / max(h_loads, 1):.2f}x;target=1.5x")
+                hetero_tile_loads=h_loads, split_tile_loads=s_loads,
+                hetero_supersteps=h_steps, split_supersteps=s_steps,
+                saving=f"{s_loads / max(h_loads, 1):.2f}x", target="1.5x",
+                **_counters(*h_ms))
 
 
 def fig_sync():
@@ -360,10 +390,10 @@ def fig_sync():
             assert m.supersteps == base.supersteps
         tag = "inf" if k == math.inf else str(k)
         row(f"fig_sync_k{tag}", dt * 1e6 / max(m.supersteps, 1),
-            f"steps_per_sync={tag};host_syncs={m.host_syncs};"
-            f"supersteps={m.supersteps};tile_loads={m.tile_loads};"
-            f"wall_s={dt:.3f};"
-            f"sync_reduction={base.host_syncs / max(m.host_syncs, 1):.2f}x")
+            steps_per_sync=tag, supersteps=m.supersteps,
+            tile_loads=m.tile_loads, wall_s=round(dt, 3),
+            sync_reduction=(f"{base.host_syncs / max(m.host_syncs, 1):.2f}x"),
+            **_counters(m))
 
 
 def fig_stream():
@@ -404,15 +434,15 @@ def fig_stream():
         handles = [sess.submit(a) for a in algs]
         assert sess.run(TwoLevel(**kw), 50000, mesh=mesh).converged
         t0 = time.time()
-        i_loads = i_steps = upd = dirty = 0
+        i_loads = i_steps = 0
+        i_ms = []
         for b in batches:
             sess.apply_updates(b)
             m = sess.run(TwoLevel(**kw), 50000, mesh=mesh)
             assert m.converged
             i_loads += m.tile_loads
             i_steps += m.supersteps
-            upd += m.updates_applied
-            dirty += m.dirty_blocks
+            i_ms.append(m)
         t_inc = time.time() - t0
 
         t0 = time.time()
@@ -432,11 +462,12 @@ def fig_stream():
         assert i_loads * 2 <= r_loads, (tag, i_loads, r_loads)
         assert i_steps <= r_steps, (tag, i_steps, r_steps)
         row(f"fig_stream_{tag}", t_inc * 1e6 / max(i_steps, 1),
-            f"inc_tile_loads={i_loads};restart_tile_loads={r_loads};"
-            f"inc_supersteps={i_steps};restart_supersteps={r_steps};"
-            f"updates_applied={upd};dirty_blocks={dirty};"
-            f"inc_makespan_s={t_inc:.2f};restart_makespan_s={t_res:.2f};"
-            f"load_saving={r_loads / max(i_loads, 1):.2f}x;target=2x")
+            inc_tile_loads=i_loads, restart_tile_loads=r_loads,
+            inc_supersteps=i_steps, restart_supersteps=r_steps,
+            inc_makespan_s=round(t_inc, 2),
+            restart_makespan_s=round(t_res, 2),
+            load_saving=f"{r_loads / max(i_loads, 1):.2f}x", target="2x",
+            **_counters(*i_ms))
         last_sess, last_handles = sess, handles
 
     # overlay-after-compaction invariant on the last (mesh-free falls back
@@ -459,8 +490,77 @@ def fig_stream():
                                        fresh.result(f),
                                        rtol=1e-3, atol=1e-5)
     row("fig_stream_compaction", 0.0,
-        "tiles_bitwise=ok;minplus_fixpoint_bitwise=ok;"
-        "plus_times=allclose")
+        tiles_bitwise="ok", minplus_fixpoint_bitwise="ok",
+        plus_times="allclose")
+
+
+def fig_trace():
+    """Observability overhead (repro.obs): the SAME hetero + streaming
+    workload with telemetry off vs on, host and device_inf backends.
+    Timing is best-of-N of RunMetrics.wall_time_s after a compile warm-up
+    (detach/resubmit keeps shapes, so repeats never retrace).  Asserts the
+    tentpole invariant — TwoLevel(device, steps_per_sync=inf) with
+    telemetry returns the full per-superstep series at host_syncs == 1,
+    schedule unchanged, at < 10% overhead — and exports a schema-validated
+    Chrome/Perfetto trace next to the JSON records."""
+    from repro.algorithms import SSSP
+    from repro.core import GraphSession, TwoLevel
+    from repro.graph import mutation_stream
+    from repro.obs import validate_trace_events
+
+    csr = uniform_graph(900, 8, seed=12)
+    algs = [PageRank(), PersonalizedPageRank(source=44), SSSP(source=0),
+            SSSP(source=17)]
+    batches = mutation_stream(csr, 2, inserts_per_batch=8,
+                              deletes_per_batch=4, seed=13)
+
+    def drive(telemetry, kw, repeats=3):
+        sess = GraphSession(csr, 64, capacity=4, seed=0,
+                            telemetry=telemetry)
+        handles = [sess.submit(a) for a in algs]
+        warm = sess.run(TwoLevel(**kw), 50000)   # compile warm-up
+        assert warm.converged
+        best, m = math.inf, warm
+        for _ in range(repeats):
+            for h in handles:
+                sess.detach(h)
+            handles = [sess.submit(a) for a in algs]
+            m = sess.run(TwoLevel(**kw), 50000)
+            assert m.converged
+            best = min(best, m.wall_time_s)
+        for b in batches:                        # streaming leg: trace the
+            sess.apply_updates(b)                # apply/dirty-boost story
+            assert sess.run(TwoLevel(**kw), 50000).converged
+        return sess, m, best
+
+    for tag, kw in (("host", dict()),
+                    ("device_inf", dict(backend="device",
+                                        steps_per_sync=math.inf))):
+        _, m_off, t_off = drive(None, kw)
+        sess, m_on, t_on = drive(True, kw)
+        # telemetry must observe, not perturb: identical schedule ...
+        assert m_on.supersteps == m_off.supersteps, (m_on, m_off)
+        assert m_on.tile_loads == m_off.tile_loads
+        tel = m_on.telemetry
+        # ... with a complete series even on the 1-sync device path
+        assert tel is not None and len(tel) == m_on.supersteps
+        assert int(tel.tile_loads.sum()) == m_on.tile_loads
+        if tag == "device_inf":
+            assert m_on.host_syncs == 1, m_on.host_syncs
+        overhead = t_on / max(t_off, 1e-9) - 1.0
+        if tag == "device_inf":   # the acceptance bound (host-path wall
+            # time is python-bookkeeping noise at this graph size)
+            assert overhead < 0.10, f"telemetry overhead {overhead:.1%}"
+        n_events = validate_trace_events(sess.trace.to_json())
+        if _JSON_DIR:
+            path = os.path.join(_JSON_DIR, f"TRACE_{tag}.json")
+            sess.trace.export(path)
+            print(f"wrote {path}", flush=True)
+        row(f"fig_trace_{tag}", t_on * 1e6 / max(m_on.supersteps, 1),
+            telemetry_off_s=round(t_off, 4), telemetry_on_s=round(t_on, 4),
+            overhead=f"{overhead * 100:.1f}%", supersteps=m_on.supersteps,
+            series_len=len(tel), trace_events=n_events, target="10%",
+            **_counters(m_on))
 
 
 MODES = {
@@ -474,11 +574,12 @@ MODES = {
     "fig_hetero": fig_hetero,
     "fig_sync": fig_sync,
     "fig_stream": fig_stream,
+    "fig_trace": fig_trace,
 }
 
 
 def main(argv=None) -> None:
-    global _CURRENT_MODE
+    global _CURRENT_MODE, _JSON_DIR
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("modes", nargs="*", metavar="mode",
                     help=f"benchmark modes to run (default: all) "
@@ -493,12 +594,14 @@ def main(argv=None) -> None:
     unknown = [m for m in args.modes if m not in MODES]
     if unknown:
         ap.error(f"unknown mode(s) {unknown}; choose from {list(MODES)}")
+    if args.json:
+        os.makedirs(args.json, exist_ok=True)
+        _JSON_DIR = args.json
     print("name,us_per_call,derived")
     for name in (args.modes or MODES):
         _CURRENT_MODE = name
         MODES[name]()
     if args.json:
-        os.makedirs(args.json, exist_ok=True)
         for name, records in RECORDS.items():
             path = os.path.join(args.json, f"BENCH_{name}.json")
             with open(path, "w") as f:

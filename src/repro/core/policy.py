@@ -58,8 +58,10 @@ creation order (`GraphSession.job_index(handle)` maps a handle to its row;
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
+import time
 from typing import List, Optional, Sequence, Union
 
 import numpy as np
@@ -70,6 +72,9 @@ from repro.core import priority as prio
 from repro.core.do_select import do_select_device
 from repro.core.global_q import accumulate_priority, synthesize_topq
 from repro.core.push import compute_pairs, indep_push_fn, shared_push_fn
+from repro.obs.telemetry import (HostSeriesBuilder, TelemetrySeries,
+                                 device_buffers, device_write,
+                                 series_from_device)
 
 HOST, DEVICE = "host", "device"
 
@@ -82,11 +87,32 @@ class RunMetrics:
     host_syncs: int = 0            # scheduling host<->device round-trips
     iterations_per_job: Optional[np.ndarray] = None
     converged: bool = False
+    wall_time_s: float = 0.0       # driver wall time of this run()
     # evolving-graph counters (repro.stream), drained from the session's
     # apply_updates() calls since the previous run()
     updates_applied: int = 0       # edge insert/delete ops absorbed
     dirty_blocks: int = 0          # blocks marked update-affected
     reseed_fraction: float = 0.0   # re-seeded share of active job state
+    # per-superstep series (repro.obs), only when the session was built
+    # with telemetry=...; None otherwise
+    telemetry: Optional[TelemetrySeries] = None
+
+    def to_dict(self, include_telemetry: bool = False) -> dict:
+        """Scalar record of this run — the ONE serialization used by the
+        benchmark harness's JSON rows and the trace exporter's run spans
+        (no ad-hoc string parsing in either)."""
+        d = {"supersteps": int(self.supersteps),
+             "tile_loads": int(self.tile_loads),
+             "job_block_pushes": int(self.job_block_pushes),
+             "host_syncs": int(self.host_syncs),
+             "converged": bool(self.converged),
+             "wall_time_s": round(float(self.wall_time_s), 6),
+             "updates_applied": int(self.updates_applied),
+             "dirty_blocks": int(self.dirty_blocks),
+             "reseed_fraction": round(float(self.reseed_fraction), 6)}
+        if include_telemetry and self.telemetry is not None:
+            d["telemetry"] = self.telemetry.to_dict()
+        return d
 
 
 @dataclasses.dataclass
@@ -100,6 +126,13 @@ class Selection:
 
     Host policies fill it with numpy values; device policies return the
     same container holding tracers (consumed inside the jitted superstep).
+
+    DTYPE CONTRACT for `tile_loads` / `job_block_pushes`: host `select`
+    returns python `int`s; `device_select` returns int32 scalars (per-step
+    values are tiny — the drivers coerce exactly once into their own
+    accumulators, float32 on device so multi-million-superstep sums never
+    wrap, int on host).  Pinned by tests/test_obs.py so telemetry series
+    never silently mix dtypes.
     """
 
     sel: Union[np.ndarray, List[np.ndarray]]
@@ -154,14 +187,35 @@ class SchedulePolicy:
     # -- driving -------------------------------------------------------------
 
     def run(self, sess, max_supersteps: int = 100000) -> RunMetrics:
+        t0 = time.perf_counter()
         if self.backend == DEVICE:
-            return _run_device(self, sess, max_supersteps)
-        return _run_host(self, sess, max_supersteps)
+            m = _run_device(self, sess, max_supersteps)
+        else:
+            m = _run_host(self, sess, max_supersteps)
+        m.wall_time_s = time.perf_counter() - t0
+        return m
+
+
+def _profiler_span(sess, name: str):
+    """jax.profiler annotation for one scheduling dispatch, opt-in via
+    TelemetryConfig(jax_profiler=True); a no-op context otherwise."""
+    cfg = getattr(sess, "telemetry", None)
+    if cfg is not None and cfg.jax_profiler:
+        return jax.profiler.TraceAnnotation(name)
+    return contextlib.nullcontext()
 
 
 # ---------------------------------------------------------------------------
 # host driver: counts fall out of the pairs dispatch; select on host
 # ---------------------------------------------------------------------------
+
+
+def _selection_occupancy(selection: Selection) -> int:
+    """Staged-selection occupancy for telemetry: shared policies report the
+    global-queue length (<= q), independent the total queue entries."""
+    if selection.shared:
+        return int(np.sum(np.asarray(selection.msk) > 0))
+    return sum(int(np.sum(np.asarray(msk) > 0)) for msk in selection.msk)
 
 
 def _run_host(policy: SchedulePolicy, sess,
@@ -170,15 +224,28 @@ def _run_host(policy: SchedulePolicy, sess,
     superstep.  The convergence counts are derived from the pairs
     (counts == node_un.sum(-1)), so policies that need pairs cost ONE
     device dispatch per group per superstep; AllBlocks keeps the cheaper
-    counts-only reduction (needs_pairs=False fast path)."""
+    counts-only reduction (needs_pairs=False fast path).
+
+    Telemetry (repro.obs): with the session built telemetry=..., each
+    superstep appends one row to a HostSeriesBuilder.  The max-residual
+    column rides the SAME pairs/counts dispatch (with_resid variant), so
+    telemetry never adds a host sync."""
     groups = sess.view_groups()
     offs = np.cumsum([0] + [g.capacity for g in groups])
     m = RunMetrics(
         iterations_per_job=np.zeros(int(offs[-1]), dtype=np.int64))
+    telemetry = getattr(sess, "telemetry", None) is not None
     if policy.needs_pairs:
-        pairs_fns = [sess._pairs_fn(g) for g in groups]
+        pairs_fns = [sess._pairs_fn(g, with_resid=telemetry)
+                     for g in groups]
     else:
-        counts_fns = [sess._counts_fn(g) for g in groups]
+        counts_fns = [sess._counts_fn(g, with_resid=telemetry)
+                      for g in groups]
+    series = (HostSeriesBuilder([g.key for g in groups]) if telemetry
+              else None)
+    resids = [0.0] * len(groups)
+    trace = getattr(sess, "trace", None)
+    trace = trace if trace is not None and trace.enabled else None
     # a group observed fully converged stays converged for the rest of this
     # run (this driver never pushes an inactive group and no job can arrive
     # mid-run), so its per-superstep dispatch can be skipped outright; the
@@ -197,67 +264,106 @@ def _run_host(policy: SchedulePolicy, sess,
                     if policy.needs_pairs else None)
 
     for _ in range(max_supersteps):
+        t_step = trace.now_us() if trace else 0.0
+        dirty_n = int((boost > 0).sum()) if boost is not None else 0
         actives = []
         node_un = p_mean = None
-        if policy.needs_pairs:
-            node_un, p_mean = [], []
-            for gi, g in enumerate(groups):
-                if done[gi] is not None:
-                    actives.append(done[gi][0])
-                    node_un.append(done[gi][1])
-                    p_mean.append(done[gi][1])
-                    continue
-                nu, pm = map(np.asarray, pairs_fns[gi](g.values, g.deltas))
-                if boost is not None:
-                    pm = pm + boost[None, :] * (nu > 0)
-                node_un.append(nu)
-                p_mean.append(pm)
-                actives.append(prio.counts_from_pairs(nu) > 0)
-                if not actives[gi].any():
-                    _mark_done(gi)
-            boost = None
-        else:
-            for gi, g in enumerate(groups):
-                if done[gi] is not None:
-                    actives.append(done[gi][0])
-                    continue
-                counts = np.asarray(counts_fns[gi](g.values, g.deltas))
-                actives.append(counts > 0)
-                if not actives[gi].any():
-                    _mark_done(gi)
+        with _profiler_span(sess, "superstep.schedule"):
+            if policy.needs_pairs:
+                node_un, p_mean = [], []
+                for gi, g in enumerate(groups):
+                    if done[gi] is not None:
+                        actives.append(done[gi][0])
+                        node_un.append(done[gi][1])
+                        p_mean.append(done[gi][1])
+                        resids[gi] = 0.0
+                        continue
+                    out = pairs_fns[gi](g.values, g.deltas)
+                    if telemetry:
+                        nu, pm, rs = out
+                        resids[gi] = float(rs)
+                        nu, pm = np.asarray(nu), np.asarray(pm)
+                    else:
+                        nu, pm = map(np.asarray, out)
+                    if boost is not None:
+                        pm = pm + boost[None, :] * (nu > 0)
+                    node_un.append(nu)
+                    p_mean.append(pm)
+                    actives.append(prio.counts_from_pairs(nu) > 0)
+                    if not actives[gi].any():
+                        _mark_done(gi)
+            else:
+                node_un = []
+                for gi, g in enumerate(groups):
+                    if done[gi] is not None:
+                        actives.append(done[gi][0])
+                        node_un.append(np.zeros(g.capacity))
+                        resids[gi] = 0.0
+                        continue
+                    out = counts_fns[gi](g.values, g.deltas)
+                    if telemetry:
+                        counts, rs = out
+                        resids[gi] = float(rs)
+                        counts = np.asarray(counts)
+                    else:
+                        counts = np.asarray(out)
+                    node_un.append(counts)
+                    actives.append(counts > 0)
+                    if not actives[gi].any():
+                        _mark_done(gi)
         for gi in range(len(groups)):
             m.iterations_per_job[offs[gi]:offs[gi + 1]][actives[gi]] += 1
         m.host_syncs += 1
         if not any(a.any() for a in actives):
             m.converged = True
             break
-        selection = policy.select(sess, node_un, p_mean, actives)
+        boost = None
+        selection = policy.select(
+            sess, node_un if policy.needs_pairs else None, p_mean, actives)
         if selection is None:
             m.converged = True
             break
+        if series is not None:
+            series.append(
+                active_jobs=sum(int(a.sum()) for a in actives),
+                tile_loads=int(selection.tile_loads),
+                job_block_pushes=int(selection.job_block_pushes),
+                gq_occupancy=_selection_occupancy(selection),
+                dirty_blocks=dirty_n,
+                unconverged=[int(np.sum(nu)) for nu in node_un],
+                max_residual=resids)
         # a fully-converged group is never pushed (matches the solo
         # session, which stops outright; for plus-times this also keeps
         # sub-tolerance residual mass where convergence left it)
-        if selection.shared:
-            sel = jnp.asarray(selection.sel)
-            msk = jnp.asarray(selection.msk)
-            for gi, g in enumerate(groups):
-                if not actives[gi].any():
-                    continue
-                g.values, g.deltas = sess._push_shared_fn(g)(
-                    g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                    sel, msk, g.push_scale, g.overlay)
-        else:
-            for gi, g in enumerate(groups):
-                if not actives[gi].any():
-                    continue
-                g.values, g.deltas = sess._push_indep_fn(g)(
-                    g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                    jnp.asarray(selection.sel[gi]),
-                    jnp.asarray(selection.msk[gi]), g.push_scale, g.overlay)
+        with _profiler_span(sess, "superstep.push"):
+            if selection.shared:
+                sel = jnp.asarray(selection.sel)
+                msk = jnp.asarray(selection.msk)
+                for gi, g in enumerate(groups):
+                    if not actives[gi].any():
+                        continue
+                    g.values, g.deltas = sess._push_shared_fn(g)(
+                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                        sel, msk, g.push_scale, g.overlay)
+            else:
+                for gi, g in enumerate(groups):
+                    if not actives[gi].any():
+                        continue
+                    g.values, g.deltas = sess._push_indep_fn(g)(
+                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
+                        jnp.asarray(selection.sel[gi]),
+                        jnp.asarray(selection.msk[gi]), g.push_scale,
+                        g.overlay)
         m.supersteps += 1
-        m.tile_loads += selection.tile_loads
-        m.job_block_pushes += selection.job_block_pushes
+        # dtype contract: host selections carry python ints (coerced once)
+        m.tile_loads += int(selection.tile_loads)
+        m.job_block_pushes += int(selection.job_block_pushes)
+        if trace:
+            trace.complete("superstep", t_step, trace.now_us() - t_step,
+                           cat="superstep", tid=2, step=m.supersteps - 1,
+                           tile_loads=int(selection.tile_loads))
+    if series is not None:
+        m.telemetry = series.build()
     return m
 
 
@@ -274,7 +380,8 @@ def build_device_step(policy: SchedulePolicy, sess):
             -> (state, unconverged_total)
 
     where state = (it, values_tuple, deltas_tuple, loads, pushes,
-    iters_tuple, boost).  Finite steps_per_sync runs a lax.scan of that
+    iters_tuple, boost, telemetry_buffers).  Finite steps_per_sync runs a
+    lax.scan of that
     many gated supersteps (a step no-ops — and counts nothing — once all
     jobs converge or the budget is spent); steps_per_sync=inf runs a
     lax.while_loop to the fixpoint.  Graph tiles / neighbour ids / push
@@ -284,8 +391,16 @@ def build_device_step(policy: SchedulePolicy, sess):
     and mesh placement (jax re-specializes on sharding, not on values).
     `boost` is the dirty-block priority injection: [B_N] added to every
     group's P_mean (where pending) on the first superstep after
-    apply_updates, then zeroed in the carry.  Cache via
-    session._device_step_fn."""
+    apply_updates, then zeroed in the carry.
+
+    `telemetry_buffers` (repro.obs) is () when the session has no
+    telemetry — the series is COMPILED OUT, the program is bit-identical
+    to the pre-observability superstep — and otherwise a tuple of
+    preallocated [capacity] arrays written at min(it, capacity-1) each
+    superstep, so a steps_per_sync=inf run returns the full per-superstep
+    series at its single host sync.  The session's jit-cache key carries
+    the capacity (0 when off), so toggling telemetry never invalidates or
+    re-traces the other variant.  Cache via session._device_step_fn."""
     groups = sess.view_groups()
     n_groups = len(groups)
     algs = [g.alg for g in groups]
@@ -295,6 +410,8 @@ def build_device_step(policy: SchedulePolicy, sess):
     bn = int(sess.scheduler.num_blocks)
     k_sync = policy.steps_per_sync
     needs_pairs = policy.needs_pairs
+    tel_cfg = getattr(sess, "telemetry", None)
+    tel_cap = int(tel_cfg.capacity) if tel_cfg is not None else 0
 
     shared_push = [shared_push_fn(g.semiring, g.push_one, sess.use_pallas)
                    for g in groups]
@@ -308,7 +425,7 @@ def build_device_step(policy: SchedulePolicy, sess):
         return tot
 
     def superstep(carry, scales, tiles, nbrs, ovs, key):
-        it, vs, ds, loads, pushes, iters, boost = carry
+        it, vs, ds, loads, pushes, iters, boost, tel = carry
         node_uns, p_means, actives = [], [], []
         for gi in range(n_groups):
             if needs_pairs:
@@ -324,6 +441,26 @@ def build_device_step(policy: SchedulePolicy, sess):
         selection = policy.device_select(
             node_uns, p_means, actives, jax.random.fold_in(key, it),
             q=q, alpha=alpha, samples=samples, num_blocks=bn)
+        if tel_cap:
+            # the per-superstep series rides the carry: int32 rows written
+            # at min(it, cap-1); pure reads of the pre-push state, so the
+            # push math — and the fixpoint — is bitwise telemetry-off
+            idx = jnp.minimum(it, tel_cap - 1)
+            if selection.shared:
+                occ = jnp.sum(selection.msk > 0).astype(jnp.int32)
+            else:
+                occ = sum(jnp.sum(msk > 0).astype(jnp.int32)
+                          for msk in selection.msk)
+            tel = device_write(
+                tel, idx,
+                sum(jnp.sum(a.astype(jnp.int32)) for a in actives),
+                selection.tile_loads, selection.job_block_pushes, occ,
+                jnp.sum(boost > 0).astype(jnp.int32),
+                jnp.stack([jnp.sum(nu).astype(jnp.int32)
+                           for nu in node_uns]),
+                jnp.stack([jnp.max(algs[gi].vertex_priority(vs[gi],
+                                                            ds[gi]))
+                           for gi in range(n_groups)]))
         new_vs, new_ds, new_iters = [], [], []
         for gi in range(n_groups):
             if selection.shared:
@@ -343,11 +480,15 @@ def build_device_step(policy: SchedulePolicy, sess):
             new_vs.append(jnp.where(keep, v2, vs[gi]))
             new_ds.append(jnp.where(keep, d2, ds[gi]))
             new_iters.append(iters[gi] + actives[gi].astype(jnp.int32))
+        # dtype contract: device selections carry int32 scalars; the carry
+        # accumulates in float32 (int32 would wrap on billion-push runs,
+        # float32 only rounds past 2^24)
         return (it + 1, tuple(new_vs), tuple(new_ds),
-                loads + selection.tile_loads,
-                pushes + selection.job_block_pushes,
+                loads + selection.tile_loads.astype(jnp.float32),
+                pushes + selection.job_block_pushes.astype(jnp.float32),
                 tuple(new_iters),
-                jnp.zeros_like(boost))   # injection consumed: one superstep
+                jnp.zeros_like(boost),   # injection consumed: one superstep
+                tel)
 
     def step_fn(state, scales, tiles, nbrs, ovs, max_steps, key):
         def body(c):
@@ -383,13 +524,18 @@ def _run_device(policy: SchedulePolicy, sess,
     step_fn = sess._device_step_fn(policy)
     boost = sess._consume_dirty_boost()
     bn = sess.scheduler.num_blocks
+    tel_cfg = getattr(sess, "telemetry", None)
+    tel_cap = int(tel_cfg.capacity) if tel_cfg is not None else 0
+    trace = getattr(sess, "trace", None)
+    trace = trace if trace is not None and trace.enabled else None
     state = (jnp.int32(0),
              tuple(g.values for g in groups),
              tuple(g.deltas for g in groups),
              jnp.float32(0), jnp.float32(0),
              tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups),
              jnp.zeros(bn, jnp.float32) if boost is None
-             else jnp.asarray(boost, jnp.float32))
+             else jnp.asarray(boost, jnp.float32),
+             device_buffers(tel_cap, len(groups)) if tel_cap else ())
     scales = tuple(g.push_scale for g in groups)
     tiles = tuple(g.graph.tiles for g in groups)
     nbrs = tuple(g.graph.nbr_ids for g in groups)
@@ -402,9 +548,16 @@ def _run_device(policy: SchedulePolicy, sess,
                              sess.scheduler._step)
     m = RunMetrics()
     while True:
-        state, un = step_fn(state, scales, tiles, nbrs, ovs, max_steps, key)
+        t_chunk = trace.now_us() if trace else 0.0
+        with _profiler_span(sess, "device_chunk"):
+            state, un = step_fn(state, scales, tiles, nbrs, ovs, max_steps,
+                                key)
+            it_h, un_h = int(state[0]), int(un)
         m.host_syncs += 1
-        it_h, un_h = int(state[0]), int(un)
+        if trace:
+            trace.complete("device_chunk", t_chunk,
+                           trace.now_us() - t_chunk, cat="superstep", tid=2,
+                           sync=m.host_syncs - 1, supersteps_done=it_h)
         if un_h == 0 or it_h >= budget:
             break
     sess.scheduler._step += it_h
@@ -416,6 +569,9 @@ def _run_device(policy: SchedulePolicy, sess,
     m.converged = un_h == 0
     m.iterations_per_job = np.concatenate(
         [np.asarray(x, dtype=np.int64) for x in state[5]])
+    if tel_cap:
+        m.telemetry = series_from_device(state[7], it_h,
+                                         [g.key for g in groups])
     return m
 
 
@@ -474,13 +630,16 @@ class TwoLevel(SchedulePolicy):
             sel, msk = _group_queues_device(nu, pm, key, gi, q, samples)
             pri, heads = accumulate_priority(pri, heads, sel, msk, q)
         gsel, gmsk = synthesize_topq(pri, heads, q, alpha)
-        pushes = jnp.float32(0)   # float32 accumulators: int32 would wrap
-        for nu in node_uns:       # on long runs, float32 only rounds >2^24
+        # dtype contract (see Selection): per-step counters are int32; the
+        # drivers accumulate in float32, which only rounds totals >2^24
+        pushes = jnp.int32(0)
+        for nu in node_uns:
             pushes = pushes + jnp.sum(
                 ((nu[:, gsel] > 0) & (gmsk > 0)[None, :])
-                .astype(jnp.float32))
+                .astype(jnp.int32))
         return Selection(gsel, gmsk, shared=True,
-                         tile_loads=jnp.sum(gmsk), job_block_pushes=pushes)
+                         tile_loads=jnp.sum(gmsk > 0).astype(jnp.int32),
+                         job_block_pushes=pushes)
 
 
 class Independent(SchedulePolicy):
@@ -511,12 +670,12 @@ class Independent(SchedulePolicy):
     def device_select(self, node_uns, p_means, actives, key, *, q, alpha,
                       samples, num_blocks):
         sels, msks = [], []
-        loads = jnp.float32(0)
+        loads = jnp.int32(0)
         for gi, (nu, pm) in enumerate(zip(node_uns, p_means)):
             sel, msk = _group_queues_device(nu, pm, key, gi, q, samples)
             sels.append(sel)
             msks.append(msk)
-            loads = loads + jnp.sum(msk)
+            loads = loads + jnp.sum(msk > 0).astype(jnp.int32)
         return Selection(sels, msks, shared=False, tile_loads=loads,
                          job_block_pushes=loads)
 
@@ -537,13 +696,13 @@ class AllBlocks(SchedulePolicy):
 
     def device_select(self, node_uns, p_means, actives, key, *, q, alpha,
                       samples, num_blocks):
-        n_active = jnp.float32(0)
+        n_active = jnp.int32(0)
         for act in actives:
-            n_active = n_active + jnp.sum(act.astype(jnp.float32))
+            n_active = n_active + jnp.sum(act.astype(jnp.int32))
         return Selection(jnp.arange(num_blocks, dtype=jnp.int32),
                          jnp.ones(num_blocks, jnp.float32), shared=True,
-                         tile_loads=jnp.float32(num_blocks),
-                         job_block_pushes=num_blocks * n_active)
+                         tile_loads=jnp.int32(num_blocks),
+                         job_block_pushes=jnp.int32(num_blocks) * n_active)
 
 
 class Fused(TwoLevel):

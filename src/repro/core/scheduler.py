@@ -70,6 +70,7 @@ class TwoLevelScheduler:
         self.rng = np.random.default_rng(seed)
         self._step = 0        # device-backend stream position (fold_in index)
         self._device_fns = {}  # jitted select/synthesis, keyed on (q, knobs)
+        self.last_occupancy = 0  # |global queue| at the latest synthesize()
 
     def reset(self, seed: Optional[int] = None) -> None:
         """Restore the RNG stream (optionally re-seeding), both backends."""
@@ -136,6 +137,7 @@ class TwoLevelScheduler:
         # so the synthesis must never hand back more than fit in the queue
         assert len(gq) <= max(1, q), \
             f"global queue overflows its budget: {len(gq)} > {q}"
+        self.last_occupancy = int(len(gq))  # serve-layer occupancy series
         return gq
 
     def _synthesize_device(self, queues, q):

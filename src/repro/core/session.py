@@ -54,6 +54,8 @@ from repro.core.do_select import DEFAULT_SAMPLES
 from repro.core.global_q import DEFAULT_ALPHA
 from repro.graph.structure import (BlockedGraph, CSRGraph, TileOverlay,
                                    build_blocked, empty_overlay)
+from repro.obs.telemetry import TelemetryConfig
+from repro.obs.trace import TraceRecorder
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,8 +131,16 @@ class GraphSession:
                  *, capacity: int = 4, c: float = PRITER_C,
                  alpha: float = DEFAULT_ALPHA, samples: int = DEFAULT_SAMPLES,
                  seed: int = 0, use_pallas: bool = False,
-                 overlay_capacity: int = 32):
+                 overlay_capacity: int = 32, telemetry=None):
         self._csr = csr
+        # observability (repro.obs): telemetry=True / TelemetryConfig(...)
+        # turns on per-superstep series + trace recording; None/False (the
+        # default) compiles the exact pre-observability programs
+        self.telemetry: Optional[TelemetryConfig] = \
+            TelemetryConfig.coerce(telemetry)
+        self.trace = TraceRecorder(
+            enabled=self.telemetry is not None and self.telemetry.trace)
+        self.trace.name_thread(2, "supersteps")
         self.block_size = block_size
         self._capacity0 = max(1, int(capacity))   # initial per-view capacity
         self.c = c
@@ -346,6 +356,8 @@ class GraphSession:
         grp.push_scale = grp.push_scale.at[slot].set(alg.get_push_scale())
         grp.algs[slot] = alg
         grp.active[slot] = True
+        self.trace.instant("submit", cat="job", alg=type(alg).__name__,
+                           view=str(grp.key), slot=slot)
         return JobHandle(slot=slot, gen=grp.gens[slot], alg=alg, view=grp.key)
 
     def _handle_group(self, handle: JobHandle) -> ViewGroup:
@@ -404,6 +416,9 @@ class GraphSession:
         grp.algs[slot] = None
         grp.active[slot] = False
         grp.gens[slot] += 1
+        self.trace.instant("detach", cat="job",
+                           alg=type(handle.alg).__name__,
+                           view=str(grp.key), slot=slot)
         return res
 
     # -- evolving graphs (repro.stream) --------------------------------------
@@ -466,7 +481,10 @@ class GraphSession:
         compilation while a subclass overriding `device_select` gets its
         own), steps_per_sync, the view keys (which algs/semirings
         participate), per-view capacities (array shapes), q, alpha,
-        samples and the pallas toggle.  Repeated run() calls,
+        samples, the pallas toggle and the telemetry capacity (0 when
+        off, so a telemetry-off session compiles the exact
+        pre-observability program and an on/off pair never shares — or
+        invalidates — a cache entry).  Repeated run() calls,
         submit/detach cycles at unchanged capacity, and re-placement on a
         mesh all REUSE the same compilation (jax re-specializes on
         shardings internally); only a genuinely new program shape — a new
@@ -474,31 +492,47 @@ class GraphSession:
         again."""
         from repro.core.policy import build_device_step
         groups = self.view_groups()
+        tel_cap = self.telemetry.capacity if self.telemetry else 0
         key = ("superstep", type(policy).device_select, policy.needs_pairs,
                policy.steps_per_sync,
                tuple(g.key for g in groups),
                tuple(g.capacity for g in groups),
                tuple(g.overlay.capacity for g in groups),
                self.q, float(self.alpha), int(self.samples),
-               self.use_pallas)
+               self.use_pallas, tel_cap)
         if key not in self._jit_cache:
             self._jit_cache[key] = build_device_step(policy, self)
         return self._jit_cache[key]
 
-    def _pairs_fn(self, grp: ViewGroup):
-        key = ("pairs", grp.key)
+    def _pairs_fn(self, grp: ViewGroup, with_resid: bool = False):
+        """with_resid=True additionally returns the group's max vertex
+        priority (the telemetry residual) from the SAME jitted program —
+        telemetry must not add a device dispatch per superstep."""
+        key = ("pairs", grp.key, with_resid)
         if key not in self._jit_cache:
             alg = grp.alg
-            self._jit_cache[key] = jax.jit(
-                lambda v, d: compute_pairs(alg, v, d))
+            if with_resid:
+                self._jit_cache[key] = jax.jit(
+                    lambda v, d: (*compute_pairs(alg, v, d),
+                                  jnp.max(alg.vertex_priority(v, d))))
+            else:
+                self._jit_cache[key] = jax.jit(
+                    lambda v, d: compute_pairs(alg, v, d))
         return self._jit_cache[key]
 
-    def _counts_fn(self, grp: ViewGroup):
-        key = ("counts", grp.key)
+    def _counts_fn(self, grp: ViewGroup, with_resid: bool = False):
+        key = ("counts", grp.key, with_resid)
         if key not in self._jit_cache:
             alg = grp.alg
-            self._jit_cache[key] = jax.jit(
-                lambda v, d: jnp.sum(alg.unconverged(v, d), axis=(1, 2)))
+            if with_resid:
+                self._jit_cache[key] = jax.jit(
+                    lambda v, d: (jnp.sum(alg.unconverged(v, d),
+                                          axis=(1, 2)),
+                                  jnp.max(alg.vertex_priority(v, d))))
+            else:
+                self._jit_cache[key] = jax.jit(
+                    lambda v, d: jnp.sum(alg.unconverged(v, d),
+                                         axis=(1, 2)))
         return self._jit_cache[key]
 
     def _push_shared_fn(self, grp: ViewGroup):
@@ -545,9 +579,43 @@ class GraphSession:
             raise ValueError("no jobs submitted yet")
         policy = TwoLevel() if policy is None else policy
         self._place(mesh)
+        t_run = self.trace.now_us() if self.trace.enabled else 0.0
         m = policy.run(self, max_supersteps)
         self._drain_stream_stats(m)
+        if self.trace.enabled:
+            self._trace_run(policy, m, t_run)
         return m
+
+    def _trace_run(self, policy, m: RunMetrics, t_run: float) -> None:
+        """One run() span + counter tracks from the telemetry series."""
+        dur = self.trace.now_us() - t_run
+        self.trace.complete("run", t_run, dur, cat="run",
+                            policy=policy.name, **m.to_dict())
+        if m.converged:
+            self.trace.instant("converged", cat="run",
+                               supersteps=int(m.supersteps))
+        tel = m.telemetry
+        if tel is None or len(tel) == 0:
+            return
+        # counter samples interpolated across the run span (the device
+        # backend has no per-superstep wall clock); stride caps the event
+        # volume for very long runs
+        k = len(tel)
+        stride = max(1, k // 2000)
+        for i in range(0, k, stride):
+            ts = t_run + dur * (i + 1) / k
+            vals = {"active_jobs": int(tel.active_jobs[i]),
+                    "tile_loads": int(tel.tile_loads[i]),
+                    "job_block_pushes": int(tel.job_block_pushes[i]),
+                    "gq_occupancy": int(tel.gq_occupancy[i]),
+                    "dirty_blocks": int(tel.dirty_blocks[i])}
+            self.trace.counter("telemetry", vals, ts_us=ts)
+            for gi in range(tel.num_groups):
+                self.trace.counter(
+                    f"group{gi}",
+                    {"unconverged": int(tel.unconverged[i, gi]),
+                     "max_residual": float(tel.max_residual[i, gi])},
+                    ts_us=ts)
 
     def step(self, policy: Optional[SchedulePolicy] = None) -> RunMetrics:
         """A single superstep under `policy`."""

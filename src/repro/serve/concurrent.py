@@ -32,11 +32,12 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.scheduler import TwoLevelScheduler
+from repro.obs.serve import ServeMetrics
 
 
 @dataclasses.dataclass
@@ -66,11 +67,18 @@ class ConcurrentServeScheduler:
     """Admission control for each decode step over shared weights."""
 
     def __init__(self, n_groups: int, batch_budget: int, *,
-                 alpha: float = 0.8, seed: int = 0, backend: str = "host"):
+                 alpha: float = 0.8, seed: int = 0, backend: str = "host",
+                 metrics: bool = True, trace=None):
         """backend selects where the two-level policy core computes its
         selection ("host" numpy / "device" jnp) — the SAME pluggable
         TwoLevelScheduler core as the graph engine, so the serve layer
-        inherits the device analogues without any code of its own."""
+        inherits the device analogues without any code of its own.
+
+        `metrics` (default on — recording is an appended float per event)
+        drives a ServeMetrics with per-stream wait time, service time and
+        per-family queue depth; `trace` optionally takes a
+        repro.obs.TraceRecorder to share a GraphSession's trace timeline
+        (admissions land as instant events on its clock)."""
         self.n_groups = n_groups
         self.batch_budget = batch_budget
         self.scheduler = TwoLevelScheduler(
@@ -81,6 +89,10 @@ class ConcurrentServeScheduler:
         self.last_admitted_by_family: Dict[str, int] = {}
         # pending dirty-group priority injection (see notify_group_update)
         self._dirty_boost: np.ndarray | None = None
+        self.metrics: Optional[ServeMetrics] = \
+            ServeMetrics() if metrics else None
+        self.trace = trace
+        self._step_idx = 0
 
     # batch_budget is mutable between steps (schedule_step recomputes q from
     # it); alpha lives canonically on the scheduler, delegated for the same
@@ -128,6 +140,11 @@ class ConcurrentServeScheduler:
         """Pick request groups via the two-level policy, then admit requests
         from selected groups (all streams share them — CAJS) up to budget."""
         streams = [self.streams[sid] for sid in sorted(self.streams)]
+        step = self._step_idx
+        if self.metrics is not None:
+            for stream in streams:          # stamp first-seen (wait clock)
+                for r in stream.waiting:
+                    self.metrics.on_seen(r, step)
         node_un = np.zeros((len(streams), self.n_groups))
         p_mean = np.zeros((len(streams), self.n_groups))
         for i, stream in enumerate(streams):
@@ -152,8 +169,11 @@ class ConcurrentServeScheduler:
             True once the batch is full (a full batch never admits)."""
             if len(admitted) >= self.batch_budget:
                 return True
-            admitted.append(streams[si].waiting[i])
+            req = streams[si].waiting[i]
+            admitted.append(req)
             taken[si].add(i)
+            if self.metrics is not None:
+                self.metrics.on_admit(req, step)
             return len(admitted) >= self.batch_budget
 
         full = False
@@ -187,4 +207,23 @@ class ConcurrentServeScheduler:
                 by_family[stream.family] = (by_family.get(stream.family, 0)
                                             + len(taken[si]))
         self.last_admitted_by_family = by_family
+        self._step_idx += 1
+        if self.metrics is not None:
+            depth: Dict[str, int] = {}      # queue pressure AFTER admission
+            for stream in streams:
+                depth[stream.family] = (depth.get(stream.family, 0)
+                                        + len(stream.waiting))
+            self.metrics.on_step(len(admitted), depth,
+                                 self.scheduler.last_occupancy)
+        if self.trace is not None:
+            self.trace.instant("serve.admit", cat="serve", tid=3,
+                               step=step, admitted=len(admitted),
+                               by_family=dict(by_family))
         return admitted
+
+    def complete(self, req: Request, service_s: Optional[float] = None
+                 ) -> None:
+        """Report a request finished decoding; records service time (wall
+        seconds since admission, or an explicit duration)."""
+        if self.metrics is not None:
+            self.metrics.on_complete(req, service_s)

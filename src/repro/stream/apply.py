@@ -151,6 +151,7 @@ def compact_group(sess, grp) -> None:
     grp.pair_slot = None
     grp.ov_used = None
     grp.ov_entry = None
+    sess.trace.instant("compact", cat="stream", view=str(grp.key))
 
 
 # ---------------------------------------------------------------------------
@@ -360,8 +361,9 @@ def apply_updates_to_session(sess, batch: UpdateBatch) -> StreamStats:
     bn = sess.scheduler.num_blocks
     dirty = np.zeros(bn, dtype=bool)
     stats = {"reseed_num": 0, "reseed_den": 0, "compacted": 0}
-    for grp in sess.view_groups():
-        _apply_to_group(sess, grp, batch, csr_old, csr_new, dirty, stats)
+    with sess.trace.span("apply_updates", cat="stream", updates=len(batch)):
+        for grp in sess.view_groups():
+            _apply_to_group(sess, grp, batch, csr_old, csr_new, dirty, stats)
 
     boost = np.where(dirty, np.float32(DIRTY_BOOST), np.float32(0.0))
     if sess._dirty_boost is None:
