@@ -1,0 +1,29 @@
+"""repro.analysis — JAX-aware static lint + compiled-artifact contracts.
+
+Three layers, one invariant surface:
+
+- :mod:`repro.analysis.lint` / :mod:`repro.analysis.rules` — stdlib-``ast``
+  lint engine with codebase-specific rules (RPA001–RPA007) over tracer
+  leaks, implicit host syncs, the selection dtype contract,
+  nondeterminism, jit-cache-key hazards, f64 promotion and set iteration.
+- :mod:`repro.analysis.contracts` — lowers the real device superstep per
+  policy and asserts contracts on the compiled HLO: one host sync on the
+  inf-cadence path, no f64, Pallas tile VMEM within budget, flops/bytes
+  cross-checked against the analytic cost model.
+- :mod:`repro.analysis.sentinels` — runtime guards packaged for pytest:
+  a ``jax.transfer_guard`` wrapper and a retrace sentinel pinning a
+  session's jit-cache size.
+
+CLI: ``python -m repro.analysis src/`` (see ``--help``); exits non-zero on
+any unbaselined finding, which is the CI gate.
+"""
+
+from repro.analysis.lint import (Finding, LintRule, lint_paths,
+                                 lint_source)
+from repro.analysis.rules import default_rules
+from repro.analysis.sentinels import (RetraceError, no_implicit_transfers,
+                                      retrace_sentinel)
+
+__all__ = ["Finding", "LintRule", "lint_paths", "lint_source",
+           "default_rules", "RetraceError", "no_implicit_transfers",
+           "retrace_sentinel"]

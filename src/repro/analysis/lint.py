@@ -1,0 +1,342 @@
+"""AST lint engine for the repro codebase's JAX invariants.
+
+The runtime can only observe a broken contract after the fact (a retrace,
+a silent host sync, an f64 program); these rules check them at the SOURCE
+level — the same "interlayer between data and systems" stance the paper
+takes for scheduling, applied to correctness contracts.  The engine is
+stdlib-`ast` only (no new dependencies): one parse per file, one shared
+`FileContext` carrying the facts every rule needs (which functions are
+jit-traced, which names hold device values, where `# noqa` comments sit),
+and a registry of small single-invariant rules (repro.analysis.rules).
+
+Suppression is two-level:
+  * inline  — ``# noqa`` or ``# noqa: RPA002[,RPA004]`` on the flagged line
+              (for intentional violations, e.g. a sanctioned host sync);
+  * baseline — a committed JSON file of accepted fingerprints
+              (repro.analysis.baseline) so the CI gate can be adopted
+              before every legacy finding is fixed.  The acceptance bar
+              for this repo is an EMPTY baseline.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+#: attribute names that hold device-resident arrays in this codebase
+#: (ViewGroup / BlockedGraph / TileOverlay fields).  Rules use them to
+#: recognize device values behind host-side containers, where pure
+#: dataflow analysis cannot see a dtype.
+DEVICE_ATTRS = frozenset({
+    "values", "deltas", "tiles", "nbr_ids", "push_scale", "overlay",
+})
+
+#: module roots whose calls produce device values / trace.
+JAX_ROOTS = frozenset({"jnp", "jax", "lax", "pl", "pltpu"})
+
+_NOQA_RE = re.compile(r"#\s*noqa(?::\s*(?P<codes>[A-Z]{3}\d{3}"
+                      r"(?:\s*,\s*[A-Z]{3}\d{3})*))?", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str          # rule id, e.g. "RPA002"
+    path: str          # as given to the engine (normalized to "/")
+    line: int          # 1-indexed
+    col: int           # 0-indexed
+    message: str
+    snippet: str = ""  # the stripped source line (fingerprint input)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"{self.rule} {self.message}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class LintRule:
+    """Base rule: subclasses set `rule_id`/`name`/`invariant` and implement
+    `check(ctx) -> Iterable[Finding]`."""
+
+    rule_id = "RPA000"
+    name = "abstract"
+    #: one-line statement of the invariant the rule protects (docs + CLI)
+    invariant = ""
+
+    def check(self, ctx: "FileContext") -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "FileContext", node: ast.AST,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 1)
+        snippet = (ctx.lines[line - 1].strip()
+                   if 0 < line <= len(ctx.lines) else "")
+        return Finding(rule=self.rule_id, path=ctx.path, line=line,
+                       col=getattr(node, "col_offset", 0),
+                       message=message, snippet=snippet)
+
+
+# ---------------------------------------------------------------------------
+# shared AST facts
+# ---------------------------------------------------------------------------
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain ("np.random.seed"), else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of a call's callee, else None."""
+    return attr_chain(node.func) if isinstance(node, ast.Call) else None
+
+
+def _chain_root(chain: Optional[str]) -> Optional[str]:
+    return chain.split(".", 1)[0] if chain else None
+
+
+def is_jax_rooted(node: ast.AST) -> bool:
+    """True when the expression is a call/attribute rooted at jnp/jax/lax."""
+    chain = attr_chain(node.func if isinstance(node, ast.Call) else node)
+    return _chain_root(chain) in JAX_ROOTS
+
+
+def mentions_device_value(node: ast.AST, device_names: Set[str]) -> bool:
+    """True when any sub-expression reads a known device value: a call or
+    attribute rooted at jnp/jax/lax, an attribute in DEVICE_ATTRS, or a
+    name locally assigned from such an expression."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute):
+            if sub.attr in DEVICE_ATTRS:
+                return True
+            if _chain_root(attr_chain(sub)) in JAX_ROOTS:
+                return True
+        elif isinstance(sub, ast.Name) and sub.id in device_names:
+            return True
+    return False
+
+
+class _ParentAnnotator(ast.NodeVisitor):
+    def visit(self, node):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node  # type: ignore[attr-defined]
+        super().generic_visit(node)
+
+
+def parents(node: ast.AST) -> Iterable[ast.AST]:
+    while True:
+        node = getattr(node, "_parent", None)
+        if node is None:
+            return
+        yield node
+
+
+_TRACE_TAKERS = {
+    # callables whose function-valued arguments are traced
+    "jax.jit", "jit", "pjit",
+    "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop",
+    "jax.lax.cond", "lax.cond",
+    "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.map", "lax.map",
+    "jax.vmap", "vmap", "jax.pmap",
+    "jax.grad", "jax.value_and_grad", "jax.checkpoint", "jax.remat",
+    "jax.lax.switch", "lax.switch",
+}
+
+
+def _jit_seeds(tree: ast.Module) -> Set[str]:
+    """Function names that enter a trace: jit-decorated, or passed by name
+    into jax.jit / lax control flow / vmap / grad anywhere in the module."""
+    seeds: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                chain = attr_chain(dec) or call_chain(dec) or ""
+                if chain in ("jax.jit", "jit", "pjit"):
+                    seeds.add(node.name)
+                elif (isinstance(dec, ast.Call)
+                      and call_chain(dec) in ("functools.partial", "partial")
+                      and dec.args
+                      and attr_chain(dec.args[0]) in ("jax.jit", "jit")):
+                    seeds.add(node.name)
+        elif isinstance(node, ast.Call):
+            chain = call_chain(node)
+            if chain in _TRACE_TAKERS:
+                for arg in list(node.args) + [kw.value
+                                              for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        seeds.add(arg.id)
+    return seeds
+
+
+def _local_call_graph(tree: ast.Module) -> Dict[str, Set[str]]:
+    """function name -> names of module/nested functions it calls."""
+    defs = {n.name for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    graph: Dict[str, Set[str]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        callees: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                    and sub.func.id in defs:
+                callees.add(sub.func.id)
+            # a nested def referenced by bare name (e.g. handed to a
+            # control-flow primitive) counts as reached from its encloser
+            elif isinstance(sub, ast.Name) and sub.id in defs:
+                callees.add(sub.id)
+        graph[node.name] = callees - {node.name}
+    return graph
+
+
+def jitted_functions(tree: ast.Module) -> Set[str]:
+    """Names of functions whose bodies are jit-traced: the decorated /
+    trace-taker-passed seeds plus everything they reach through local
+    calls (a helper called from a jitted body is traced too)."""
+    seeds = _jit_seeds(tree)
+    graph = _local_call_graph(tree)
+    reached, work = set(seeds), list(seeds)
+    while work:
+        for callee in graph.get(work.pop(), ()):
+            if callee not in reached:
+                reached.add(callee)
+                work.append(callee)
+    return reached
+
+
+class FileContext:
+    """Everything rules need about one source file, computed once."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        _ParentAnnotator().visit(self.tree)
+        self.jitted: Set[str] = jitted_functions(self.tree)
+        self._noqa: Dict[int, Optional[Set[str]]] = {}
+        for i, line in enumerate(self.lines, 1):
+            m = _NOQA_RE.search(line)
+            if m:
+                codes = m.group("codes")
+                self._noqa[i] = (None if codes is None else
+                                 {c.strip().upper()
+                                  for c in codes.split(",")})
+
+    # -- helpers -------------------------------------------------------------
+
+    def functions(self) -> List[ast.FunctionDef]:
+        return [n for n in ast.walk(self.tree)
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+    def in_jitted_function(self, node: ast.AST) -> bool:
+        for p in parents(node):
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return p.name in self.jitted
+        return False
+
+    def enclosing_loop(self, node: ast.AST) -> Optional[ast.AST]:
+        """Nearest enclosing host loop (incl. comprehensions — a per-
+        element sync in a listcomp is the same bug as in a for loop),
+        stopping at a function boundary."""
+        for p in parents(node):
+            if isinstance(p, (ast.For, ast.While, ast.ListComp,
+                              ast.SetComp, ast.DictComp,
+                              ast.GeneratorExp)):
+                return p
+            if isinstance(p, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return None
+        return None
+
+    def local_device_names(self, fn: ast.AST) -> Set[str]:
+        """Names assigned (anywhere in `fn`) from a jnp/jax/lax-rooted call
+        or from a DEVICE_ATTRS attribute read."""
+        names: Set[str] = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                tgt, val = sub.targets[0], sub.value
+                src = val
+                while isinstance(src, ast.Subscript):
+                    src = src.value
+                # jax.device_get produces HOST values: its targets are
+                # the sanctioned sync results, not device values
+                if isinstance(src, ast.Call) and call_chain(src) in (
+                        "jax.device_get", "device_get"):
+                    continue
+                hit = (is_jax_rooted(src)
+                       or (isinstance(src, ast.Attribute)
+                           and src.attr in DEVICE_ATTRS))
+                if hit:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+                    elif isinstance(tgt, ast.Tuple):
+                        names.update(e.id for e in tgt.elts
+                                     if isinstance(e, ast.Name))
+        return names
+
+    def suppressed(self, finding: Finding) -> bool:
+        codes = self._noqa.get(finding.line, False)
+        if codes is False:
+            return False
+        return codes is None or finding.rule in codes
+
+
+# ---------------------------------------------------------------------------
+# running
+# ---------------------------------------------------------------------------
+
+
+def lint_source(path: str, source: str,
+                rules: Sequence[LintRule]) -> List[Finding]:
+    """All (non-inline-suppressed) findings for one file."""
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return [Finding(rule="RPA999", path=path, line=e.lineno or 1,
+                        col=(e.offset or 1) - 1,
+                        message=f"syntax error: {e.msg}")]
+    out: List[Finding] = []
+    for rule in rules:
+        for f in rule.check(ctx):
+            if not ctx.suppressed(f):
+                out.append(f)
+    out.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return out
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Sequence[LintRule]] = None) -> List[Finding]:
+    """Lint every .py file under `paths` (files or directories)."""
+    import os
+
+    from repro.analysis.rules import default_rules
+    rules = list(rules) if rules is not None else default_rules()
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    findings: List[Finding] = []
+    for fp in files:
+        with open(fp, "r", encoding="utf-8") as fh:
+            findings.extend(lint_source(fp, fh.read(), rules))
+    return findings

@@ -1,0 +1,490 @@
+"""Codebase-specific lint rules over the shared FileContext.
+
+Every rule protects ONE invariant the runtime layers pinned by hand-written
+regression tests in earlier PRs; the ids are stable (baseline fingerprints
+and `# noqa: RPAxxx` suppressions reference them):
+
+  RPA001 tracer-leak      Python control flow / scalar coercion of traced
+                          values inside jit-traced functions.
+  RPA002 loop-host-sync   Implicit device->host materialization inside a
+                          host loop (one blocking sync per iteration);
+                          `jax.device_get` is the sanctioned explicit form.
+  RPA003 select-dtype     The PR 6 selection dtype contract: device
+                          selection state is int32, host selection python
+                          ints; array creation in scheduling modules names
+                          its dtype (numpy defaults to float64/int64 and
+                          drifts across the host/device boundary).
+  RPA004 nondeterminism   Wall-clock / global-RNG entropy in library code
+                          (schedules must replay from a threaded seed).
+  RPA005 jit-cache-key    Per-call `jax.jit` of ephemeral callables
+                          (retrace per call) and unhashable objects inside
+                          cache-key tuples.
+  RPA006 f64-promotion    Explicit 64-bit dtypes on device arrays (x64 is
+                          off: silently truncates today, doubles memory and
+                          forfeits the MXU the day someone flips it on).
+  RPA007 set-iteration    Iterating a set in scheduling code: hash-order
+                          reaches the schedule (PYTHONHASHSEED-dependent
+                          for strings) — sort before iterating.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional
+
+from repro.analysis.lint import (DEVICE_ATTRS, FileContext, Finding,
+                                 LintRule, attr_chain, call_chain,
+                                 is_jax_rooted, mentions_device_value,
+                                 parents)
+
+#: modules whose array creations participate in scheduling decisions —
+#: the selection dtype contract (RPA003) applies to them
+SELECTION_MODULES = ("core/do_select.py", "core/global_q.py",
+                     "core/policy.py", "core/scheduler.py",
+                     "core/priority.py", "serve/concurrent.py")
+
+_COERCIONS = ("float", "int", "bool", "complex")
+_NP_MATERIALIZE = ("np.asarray", "np.array", "numpy.asarray", "numpy.array")
+
+
+def _in_selection_module(ctx: FileContext) -> bool:
+    return any(ctx.path.endswith(m) for m in SELECTION_MODULES)
+
+
+def _dtype_of_call(node: ast.Call) -> Optional[ast.AST]:
+    """The dtype argument of an array-creation call, positional or kw."""
+    for kw in node.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    chain = call_chain(node) or ""
+    leaf = chain.rsplit(".", 1)[-1]
+    # np.zeros(shape, dtype) / jnp.full(shape, fill, dtype) positional slots
+    pos = {"zeros": 1, "ones": 1, "empty": 1, "arange": None,
+           "full": 2, "asarray": 1, "array": 1}.get(leaf)
+    if pos is not None and len(node.args) > pos:
+        return node.args[pos]
+    return None
+
+
+def _names_64bit(node: ast.AST) -> bool:
+    chain = attr_chain(node)
+    if chain and chain.rsplit(".", 1)[-1] in ("float64", "int64", "uint64"):
+        return True
+    return (isinstance(node, ast.Constant)
+            and node.value in ("float64", "int64", "uint64"))
+
+
+class TracerLeakRule(LintRule):
+    rule_id = "RPA001"
+    name = "tracer-leak"
+    invariant = ("jit-traced code never branches on / coerces a traced "
+                 "value with Python `if`/`while`/`bool()`/`int()`/`float()`"
+                 " — use lax.cond/select, jnp.where, or hoist to host")
+
+    @staticmethod
+    def _traced_test(test: ast.AST, device) -> bool:
+        """A traced value reaches `test` in a VALUE position.
+
+        Seeds: bare names of tracers (jitted-fn params and jnp-derived
+        locals), DEVICE_ATTRS attribute reads, jnp/lax-rooted calls.
+        A seed is discounted when, climbing toward the test root, it
+        passes through structure that makes the branch static at trace
+        time: an attribute read (``x.shape``, ``cfg.flag``,
+        ``ov.capacity`` — array value-attrs live in DEVICE_ATTRS, so
+        anything else is metadata/config), an ``is``/``is not``
+        comparison, a comparison against a string constant (dict keys,
+        mode switches), or membership in an all-constant collection
+        (``kind in ("attn", "swa")``)."""
+        def _static_compare(cmp: ast.Compare) -> bool:
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in cmp.ops):
+                return True
+            operands = [cmp.left] + list(cmp.comparators)
+            if any(isinstance(o, ast.Constant) and isinstance(o.value, str)
+                   for o in operands):
+                return True
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in cmp.ops):
+                return all(
+                    isinstance(c, (ast.Tuple, ast.List, ast.Set))
+                    and all(isinstance(e, ast.Constant) for e in c.elts)
+                    for c in cmp.comparators)
+            return False
+
+        seeds = []
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in device:
+                seeds.append(sub)
+            elif isinstance(sub, ast.Attribute) \
+                    and sub.attr in DEVICE_ATTRS:
+                seeds.append(sub)
+            elif isinstance(sub, ast.Call) and is_jax_rooted(sub):
+                seeds.append(sub)
+        for seed in seeds:
+            static = False
+            for p in parents(seed):
+                if isinstance(p, ast.Attribute):
+                    static = True   # metadata read off the value
+                    break
+                if isinstance(p, ast.Compare) and _static_compare(p):
+                    static = True
+                    break
+                if p is test:
+                    break
+            if not static:
+                return True
+        return False
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for fn in ctx.functions():
+            if fn.name not in ctx.jitted:
+                continue
+            device = set(ctx.local_device_names(fn))
+            for a in fn.args.args + fn.args.kwonlyargs:
+                device.add(a.arg)  # params of a jitted fn are tracers
+            for sub in ast.walk(fn):
+                if isinstance(sub, (ast.If, ast.While)):
+                    if self._traced_test(sub.test, device):
+                        out.append(self.finding(
+                            ctx, sub,
+                            f"Python `{type(sub).__name__.lower()}` on a "
+                            f"traced value inside jitted `{fn.name}` "
+                            f"(ConcretizationError at trace time, or a "
+                            f"silently baked-in branch)"))
+                elif isinstance(sub, ast.Assert):
+                    if self._traced_test(sub.test, device):
+                        out.append(self.finding(
+                            ctx, sub,
+                            f"assert on a traced value inside jitted "
+                            f"`{fn.name}` — use checkify or move the "
+                            f"check to host"))
+                elif isinstance(sub, ast.Call):
+                    chain = call_chain(sub)
+                    if chain in _COERCIONS and sub.args and \
+                            self._traced_test(sub.args[0], device):
+                        out.append(self.finding(
+                            ctx, sub,
+                            f"`{chain}()` of a traced value inside jitted "
+                            f"`{fn.name}` forces a concrete value at "
+                            f"trace time"))
+                    elif chain in _NP_MATERIALIZE and sub.args and \
+                            self._traced_test(sub.args[0], device):
+                        out.append(self.finding(
+                            ctx, sub,
+                            f"`{chain}()` of a traced value inside jitted "
+                            f"`{fn.name}` breaks the trace (use jnp)"))
+        return out
+
+
+class LoopHostSyncRule(LintRule):
+    rule_id = "RPA002"
+    name = "loop-host-sync"
+    invariant = ("host loops never implicitly materialize device values "
+                 "per iteration — hoist one batched `jax.device_get` (or "
+                 "np.asarray) above the loop; intentional syncs are "
+                 "explicit `jax.device_get` calls")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for fn in ctx.functions():
+            if fn.name in ctx.jitted:
+                continue  # traced bodies are RPA001's territory
+            device = ctx.local_device_names(fn)
+            for sub in ast.walk(fn):
+                if not isinstance(sub, ast.Call):
+                    continue
+                if ctx.enclosing_loop(sub) is None:
+                    continue
+                chain = call_chain(sub)
+                is_item = (isinstance(sub.func, ast.Attribute)
+                           and sub.func.attr == "item")
+                arg0 = (sub.func.value if is_item
+                        else sub.args[0] if sub.args else None)
+                if arg0 is None:
+                    continue
+                if is_item or chain in _COERCIONS \
+                        or chain in _NP_MATERIALIZE:
+                    if mentions_device_value(arg0, device) \
+                            and not self._already_explicit(arg0):
+                        label = "`.item()`" if is_item else f"`{chain}()`"
+                        out.append(self.finding(
+                            ctx, sub,
+                            f"{label} on a device value inside a loop: one "
+                            f"blocking device->host sync per iteration — "
+                            f"hoist a single batched jax.device_get above "
+                            f"the loop"))
+        return out
+
+    @staticmethod
+    def _already_explicit(node: ast.AST) -> bool:
+        """The argument is itself a device_get result: sanctioned."""
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and call_chain(sub) in (
+                    "jax.device_get", "device_get"):
+                return True
+        return False
+
+
+class SelectDtypeRule(LintRule):
+    rule_id = "RPA003"
+    name = "select-dtype"
+    invariant = ("selection state keeps the PR 6 dtype contract: device "
+                 "selections are int32 scalars/arrays, host selections "
+                 "python ints; arrays created in scheduling modules name "
+                 "their dtype explicitly (numpy's float64/int64 defaults "
+                 "drift across the host/device boundary)")
+
+    _CREATORS = ("np.zeros", "np.ones", "np.empty", "np.full", "np.arange",
+                 "numpy.zeros", "numpy.ones", "numpy.empty", "numpy.full",
+                 "numpy.arange")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        if not _in_selection_module(ctx):
+            return []
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = call_chain(node)
+            if chain in self._CREATORS:
+                if _dtype_of_call(node) is None:
+                    out.append(self.finding(
+                        ctx, node,
+                        f"`{chain}` without an explicit dtype in a "
+                        f"scheduling module defaults to float64/int64 and "
+                        f"drifts when it crosses to the device backend "
+                        f"(weak f64 -> silent f32 downcast)"))
+            elif isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "astype" and node.args:
+                tgt = node.args[0]
+                if _names_64bit(tgt) or (isinstance(tgt, ast.Name)
+                                         and tgt.id == "int"):
+                    if mentions_device_value(node.func.value, set()) \
+                            or is_jax_rooted(node.func.value):
+                        out.append(self.finding(
+                            ctx, node,
+                            "64-bit astype on a device value breaks the "
+                            "int32 selection contract (x64 is off: this "
+                            "is a silent downcast today and a retrace "
+                            "hazard the day it isn't)"))
+        return out
+
+
+class NondeterminismRule(LintRule):
+    rule_id = "RPA004"
+    name = "nondeterminism"
+    invariant = ("library code draws no entropy outside the threaded seed: "
+                 "no wall-clock seeds, no global numpy RNG, no stdlib "
+                 "random — schedules must replay bit-identically")
+
+    _NP_GLOBAL = {"seed", "rand", "randn", "randint", "random", "choice",
+                  "shuffle", "permutation", "uniform", "normal",
+                  "standard_normal", "integers"}
+    _STDLIB = {"random.random", "random.randint", "random.choice",
+               "random.shuffle", "random.seed", "random.sample",
+               "random.uniform", "random.randrange", "random.getrandbits"}
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = call_chain(node) or ""
+            if chain in ("time.time", "time.time_ns"):
+                out.append(self.finding(
+                    ctx, node,
+                    "`time.time()` in library code: wall-clock values leak "
+                    "into behaviour (use time.perf_counter for durations, "
+                    "a threaded seed for randomness)"))
+            elif chain in ("datetime.datetime.now", "datetime.now",
+                           "datetime.datetime.utcnow"):
+                out.append(self.finding(
+                    ctx, node, f"`{chain}()` in library code is "
+                    f"nondeterministic"))
+            elif chain in ("np.random.default_rng",
+                           "numpy.random.default_rng"):
+                if not node.args and not node.keywords:
+                    out.append(self.finding(
+                        ctx, node,
+                        "`np.random.default_rng()` without a seed draws OS "
+                        "entropy — thread an explicit seed"))
+            elif chain.startswith(("np.random.", "numpy.random.")) \
+                    and chain.rsplit(".", 1)[-1] in self._NP_GLOBAL:
+                out.append(self.finding(
+                    ctx, node,
+                    f"global numpy RNG `{chain}` — shared mutable state, "
+                    f"not replayable; use np.random.default_rng(seed)"))
+            elif chain in self._STDLIB:
+                out.append(self.finding(
+                    ctx, node,
+                    f"stdlib `{chain}` — global RNG in library code"))
+            elif chain in ("os.urandom", "uuid.uuid4", "secrets.token_hex"):
+                out.append(self.finding(
+                    ctx, node, f"`{chain}` draws OS entropy in library "
+                    f"code"))
+        return out
+
+
+class JitCacheKeyRule(LintRule):
+    rule_id = "RPA005"
+    name = "jit-cache-key"
+    invariant = ("compiled callables are cached: no per-call `jax.jit` of "
+                 "an ephemeral lambda/closure (every call re-traces), and "
+                 "cache-key tuples hold only hashable, stable components")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and call_chain(node) in ("jax.jit", "jit") and node.args:
+                f = self._check_jit_site(ctx, node)
+                if f is not None:
+                    out.append(f)
+            elif isinstance(node, ast.Assign):
+                out.extend(self._check_key_tuple(ctx, node))
+        return out
+
+    def _check_jit_site(self, ctx: FileContext,
+                        node: ast.Call) -> Optional[Finding]:
+        in_function = any(isinstance(p, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))
+                          for p in parents(node))
+        if not in_function:
+            return None  # module-level jit compiles once per process
+        # immediately-called jit is always a fresh trace: jax.jit(f)(x)
+        parent = next(iter(parents(node)), None)
+        if isinstance(parent, ast.Call) and parent.func is node:
+            return self.finding(
+                ctx, node,
+                "`jax.jit(...)(...)` called inline: the wrapper (and its "
+                "trace cache) dies with the expression — every call "
+                "re-traces; hoist the jitted callable")
+        guarded = cached = returned = in_loop = False
+        for p in parents(node):
+            if isinstance(p, ast.If) and any(
+                    isinstance(op, ast.NotIn)
+                    for cmp in ast.walk(p.test)
+                    if isinstance(cmp, ast.Compare)
+                    for op in cmp.ops):
+                guarded = True
+            if isinstance(p, ast.Assign) and any(
+                    isinstance(t, ast.Subscript) for t in p.targets):
+                cached = True
+            if isinstance(p, ast.Return):
+                returned = True
+            if isinstance(p, (ast.For, ast.While)):
+                in_loop = True
+        if guarded or cached:
+            return None
+        if returned and not in_loop:
+            return None  # factory: the caller owns caching (session cache)
+        if isinstance(node.args[0], ast.Lambda) or in_loop:
+            return self.finding(
+                ctx, node,
+                "per-call `jax.jit` of an ephemeral callable without a "
+                "cache guard: a fresh lambda/closure hashes differently "
+                "every call, so every call re-traces — store it in a "
+                "keyed cache (see GraphSession._jit_cache)")
+        return None
+
+    def _check_key_tuple(self, ctx: FileContext,
+                         node: ast.Assign) -> Iterable[Finding]:
+        tgt = node.targets[0] if len(node.targets) == 1 else None
+        if not (isinstance(tgt, ast.Name) and "key" in tgt.id.lower()):
+            return []
+        if not isinstance(node.value, ast.Tuple):
+            return []
+        out = []
+        for elt in node.value.elts:
+            if isinstance(elt, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                ast.DictComp, ast.SetComp)):
+                out.append(self.finding(
+                    ctx, elt,
+                    f"unhashable {type(elt).__name__} inside the cache-key "
+                    f"tuple `{tgt.id}`: the cache lookup raises TypeError "
+                    f"(or silently never hits) — use a tuple"))
+        return out
+
+
+class F64PromotionRule(LintRule):
+    rule_id = "RPA006"
+    name = "f64-promotion"
+    invariant = ("device arrays never name 64-bit dtypes: with x64 off the "
+                 "request is silently truncated to 32-bit; with x64 on it "
+                 "doubles HBM traffic and forfeits the MXU")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute):
+                chain = attr_chain(node) or ""
+                if chain in ("jnp.float64", "jnp.int64", "jnp.uint64"):
+                    out.append(self.finding(
+                        ctx, node,
+                        f"`{chain}` names a 64-bit device dtype"))
+            elif isinstance(node, ast.Call):
+                chain = call_chain(node) or ""
+                if chain.startswith("jnp."):
+                    dt = _dtype_of_call(node)
+                    if dt is not None and _names_64bit(dt) \
+                            and (attr_chain(dt) or "").split(".")[0] != \
+                            "jnp":
+                        out.append(self.finding(
+                            ctx, node,
+                            f"64-bit dtype in `{chain}`: x64 is off, the "
+                            f"array silently lands as 32-bit"))
+                elif chain in ("jax.config.update",):
+                    if (node.args
+                            and isinstance(node.args[0], ast.Constant)
+                            and node.args[0].value == "jax_enable_x64"):
+                        out.append(self.finding(
+                            ctx, node,
+                            "library code must not flip jax_enable_x64: "
+                            "it is process-global and retraces every "
+                            "cached program"))
+        return out
+
+
+class SetIterationRule(LintRule):
+    rule_id = "RPA007"
+    name = "set-iteration"
+    invariant = ("scheduling code never iterates a set directly: hash "
+                 "order (PYTHONHASHSEED-dependent for strings) would reach "
+                 "the schedule — wrap in sorted()")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        out: List[Finding] = []
+        iters = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters.append((node, node.iter))
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                iters.extend((node, gen.iter) for gen in node.generators)
+        for node, it in iters:
+            if self._is_set_expr(it):
+                out.append(self.finding(
+                    ctx, node,
+                    "iterating a set: order is hash-dependent and can "
+                    "reach scheduling decisions — iterate sorted(...) "
+                    "instead"))
+        return out
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call) and call_chain(node) in ("set",
+                                                               "frozenset"):
+            return True
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.BitOr, ast.BitAnd, ast.Sub)):
+            return (SetIterationRule._is_set_expr(node.left)
+                    or SetIterationRule._is_set_expr(node.right))
+        return False
+
+
+def default_rules() -> List[LintRule]:
+    """The registry, id-ordered (stable for docs, CLI and reports)."""
+    return [TracerLeakRule(), LoopHostSyncRule(), SelectDtypeRule(),
+            NondeterminismRule(), JitCacheKeyRule(), F64PromotionRule(),
+            SetIterationRule()]

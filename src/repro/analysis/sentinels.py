@@ -1,0 +1,87 @@
+"""Runtime sentinels: the dynamic half of the analysis layer.
+
+Two guards, both packaged as context managers so tests (via the fixtures
+in tests/conftest.py) can wrap existing scenarios without restructuring:
+
+- :func:`no_implicit_transfers` — ``jax.transfer_guard("disallow")``
+  around a block.  The drivers perform their intentional syncs through
+  explicit ``jax.device_get`` (which the guard permits), so ANY guard trip
+  inside a run is an unintended implicit transfer — exactly the class of
+  regression RPA001/RPA002 catch statically.
+
+- :func:`retrace_sentinel` — pins a ``GraphSession``'s jit cache.  On
+  exit it fails if the cache grew past the pinned size: new keys mean the
+  cache key leaked an ephemeral component (RPA005); a grown per-entry
+  trace count (``_cache_size``) means an argument changed its
+  shape/dtype/weak-type between calls and silently re-traced.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Iterable, Optional, Tuple
+
+
+class RetraceError(AssertionError):
+    """A pinned jit cache grew — some call re-traced or re-keyed."""
+
+
+def _trace_count(fn) -> Optional[int]:
+    size = getattr(fn, "_cache_size", None)
+    if callable(size):
+        try:
+            return int(size())
+        except Exception:
+            return None
+    return None
+
+
+def snapshot_jit_cache(sess) -> Dict[Tuple, Optional[int]]:
+    """{cache key: per-entry trace count (None if unavailable)}."""
+    return {k: _trace_count(fn) for k, fn in sess._jit_cache.items()}
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """All device->host movement inside the block must be explicit
+    ``jax.device_get``; implicit coercions (`float()`, `.item()`,
+    `np.asarray` forcing a copy) raise.  Host->device setup transfers
+    (`jnp.int32(0)` seeding a carry, argument staging) are deliberately
+    NOT guarded — they are cheap, non-blocking, and every driver performs
+    them; the invariant the paper's speedups rest on is the *sync*
+    direction."""
+    import jax
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def retrace_sentinel(sess, allow_new: Iterable[str] = ()):
+    """Fail on exit if `sess`'s jit cache grew past its pinned size.
+
+    ``allow_new`` whitelists cache-key *kinds* (the key tuple's first
+    element, e.g. ``"superstep"``) that the block is expected to compile
+    for the first time — growth of an already-pinned entry is never
+    allowed.
+    """
+    before = snapshot_jit_cache(sess)
+    allowed = frozenset(allow_new)
+    yield
+    after = snapshot_jit_cache(sess)
+    new_keys = [k for k in after if k not in before]
+    bad_new = [k for k in new_keys
+               if not (isinstance(k, tuple) and k and k[0] in allowed)]
+    if bad_new:
+        raise RetraceError(
+            f"jit cache gained {len(bad_new)} unexpected key(s): "
+            f"{bad_new[:3]!r} — an ephemeral component reached the cache "
+            f"key (every such key is a full re-trace)")
+    grown = [(k, before[k], after[k]) for k in before
+             if before[k] is not None and after[k] is not None
+             and after[k] > before[k]]
+    if grown:
+        k, b, a = grown[0]
+        raise RetraceError(
+            f"{len(grown)} pinned jit entr(y/ies) re-traced "
+            f"(first: key={k!r} traces {b} -> {a}) — an argument changed "
+            f"shape/dtype/weak-type between calls")

@@ -53,6 +53,20 @@ def De_Gl_Priority(job_queues: Sequence[np.ndarray], num_blocks: int, q: int,
     return TwoLevelScheduler(num_blocks, q, alpha=alpha).synthesize(job_queues)
 
 
+_CON_PUSH_JIT: dict = {}
+
+
+def _con_push(push):
+    """Compiled vmapped push, cached per push function (RPA005: a fresh
+    jax.jit of a fresh vmap closure would re-trace on every superstep)."""
+    fn = _CON_PUSH_JIT.get(push)
+    if fn is None:
+        fn = jax.jit(jax.vmap(push, in_axes=(0, 0, None, None, None,
+                                             None, 0)))
+        _CON_PUSH_JIT[push] = fn
+    return fn
+
+
 def Con_processing(run: ConcurrentRun, gq: np.ndarray, q: int):
     """CAJS: stage each selected block once; every job processes it."""
     g = run.graph
@@ -62,8 +76,7 @@ def Con_processing(run: ConcurrentRun, gq: np.ndarray, q: int):
     msk = np.zeros(q, dtype=np.float32)
     sel[:len(gq)] = gq[:q]
     msk[:len(gq)] = 1.0
-    values, deltas = jax.jit(jax.vmap(
-        push, in_axes=(0, 0, None, None, None, None, 0)))(
+    values, deltas = _con_push(push)(
         run.values, run.deltas, g.tiles, g.nbr_ids,
         jnp.asarray(sel), jnp.asarray(msk), run.push_scale)
     return values, deltas

@@ -279,12 +279,14 @@ def _run_host(policy: SchedulePolicy, sess,
                         resids[gi] = 0.0
                         continue
                     out = pairs_fns[gi](g.values, g.deltas)
+                    # the ONE intentional sync per group per superstep —
+                    # explicit device_get keeps transfer_guard("disallow")
+                    # clean (implicit float()/np coercions would trip it)
                     if telemetry:
-                        nu, pm, rs = out
+                        nu, pm, rs = jax.device_get(out)
                         resids[gi] = float(rs)
-                        nu, pm = np.asarray(nu), np.asarray(pm)
                     else:
-                        nu, pm = map(np.asarray, out)
+                        nu, pm = jax.device_get(out)
                     if boost is not None:
                         pm = pm + boost[None, :] * (nu > 0)
                     node_un.append(nu)
@@ -297,16 +299,16 @@ def _run_host(policy: SchedulePolicy, sess,
                 for gi, g in enumerate(groups):
                     if done[gi] is not None:
                         actives.append(done[gi][0])
-                        node_un.append(np.zeros(g.capacity))
+                        node_un.append(np.zeros(g.capacity,
+                                                dtype=np.int32))
                         resids[gi] = 0.0
                         continue
                     out = counts_fns[gi](g.values, g.deltas)
                     if telemetry:
-                        counts, rs = out
+                        counts, rs = jax.device_get(out)
                         resids[gi] = float(rs)
-                        counts = np.asarray(counts)
                     else:
-                        counts = np.asarray(out)
+                        counts = jax.device_get(out)
                     node_un.append(counts)
                     actives.append(counts > 0)
                     if not actives[gi].any():
@@ -552,7 +554,9 @@ def _run_device(policy: SchedulePolicy, sess,
         with _profiler_span(sess, "device_chunk"):
             state, un = step_fn(state, scales, tiles, nbrs, ovs, max_steps,
                                 key)
-            it_h, un_h = int(state[0]), int(un)
+            # the ONE host sync of the chunk: explicit, batched, and the
+            # only transfer a transfer_guard("disallow") run will see
+            it_h, un_h = map(int, jax.device_get((state[0], un)))
         m.host_syncs += 1
         if trace:
             trace.complete("device_chunk", t_chunk,
@@ -564,11 +568,13 @@ def _run_device(policy: SchedulePolicy, sess,
     for gi, g in enumerate(groups):
         g.values, g.deltas = state[1][gi], state[2][gi]
     m.supersteps = it_h
-    m.tile_loads = int(state[3])
-    m.job_block_pushes = int(state[4])
+    loads_h, pushes_h, iters_h = jax.device_get(
+        (state[3], state[4], state[5]))
+    m.tile_loads = int(loads_h)
+    m.job_block_pushes = int(pushes_h)
     m.converged = un_h == 0
     m.iterations_per_job = np.concatenate(
-        [np.asarray(x, dtype=np.int64) for x in state[5]])
+        [np.asarray(x, dtype=np.int64) for x in iters_h])
     if tel_cap:
         m.telemetry = series_from_device(state[7], it_h,
                                          [g.key for g in groups])

@@ -387,14 +387,14 @@ class GraphSession:
         concatenated in creation order (0 for free slots) — one device
         reduction per view; index by `job_index(handle)` to poll many
         handles (== handle.slot for single-view sessions)."""
-        parts = [np.asarray(self._counts_fn(g)(g.values, g.deltas))
+        parts = [jax.device_get(self._counts_fn(g)(g.values, g.deltas))
                  for g in self.groups.values()]
         return (np.concatenate(parts) if parts
                 else np.zeros(0, dtype=np.int32))
 
     def converged(self, handle: JobHandle) -> bool:
         grp = self._handle_group(handle)
-        counts = np.asarray(self._counts_fn(grp)(grp.values, grp.deltas))
+        counts = jax.device_get(self._counts_fn(grp)(grp.values, grp.deltas))
         return bool(counts[handle.slot] == 0)
 
     def result(self, handle: JobHandle) -> np.ndarray:
@@ -402,7 +402,7 @@ class GraphSession:
         grp = self._handle_group(handle)
         res = handle.alg.result(grp.values[handle.slot],
                                 grp.deltas[handle.slot])
-        return np.asarray(res).reshape(-1)[:grp.graph.n_real]
+        return jax.device_get(res).reshape(-1)[:grp.graph.n_real]
 
     def detach(self, handle: JobHandle) -> np.ndarray:
         """Extract the job's result and free its slot for reuse."""

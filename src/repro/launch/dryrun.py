@@ -37,16 +37,16 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     cell = build_cell(arch, shape_name, mesh, accum_steps=accum_steps)
     cfg = cell.meta["cfg"]
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings,
                          donate_argnums=cell.donate)
         lowered = jitted.lower(*cell.args)
-        t_lower = time.time() - t0
-        t0 = time.time()
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
         compiled = lowered.compile()
-        t_compile = time.time() - t0
+        t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

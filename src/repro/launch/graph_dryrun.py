@@ -76,11 +76,11 @@ def run(n_vertices: int, n_jobs: int, vb: int, avg_nbr_blocks: int,
     )
     out_sh = (sh[0], sh[1], NamedSharding(mesh, P()))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         comp = jax.jit(step, in_shardings=sh, out_shardings=out_sh,
                        donate_argnums=(0, 1)).lower(*specs).compile()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     mem = comp.memory_analysis()
     hlo = comp.as_text()
     colls = H.parse_collectives(hlo, mesh.size)

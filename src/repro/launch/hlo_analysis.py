@@ -11,9 +11,10 @@ the config); collectives outside loops count once.
 from __future__ import annotations
 
 import dataclasses
+import math
 import re
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 
 _DTYPE_BYTES = {
@@ -117,13 +118,43 @@ def _computation_blocks(hlo: str) -> Dict[str, str]:
     return blocks
 
 
+#: one HLO scalar literal: int, float, or scientific notation (XLA prints
+#: large bounds as e.g. `constant(2.14748365e+09)`, and f32 loop bounds as
+#: `constant(1000)` or `constant(1e+06)` depending on magnitude)
+_SCALAR_NUM = r"[-+]?(?:\d+\.?\d*|\.\d+)(?:[eE][-+]?\d+)?"
+
+
+def _parse_scalar(text: str) -> Optional[int]:
+    """An HLO scalar constant as an int, or None if not a finite number.
+
+    Trip counts are integral even when the condition compares against an
+    f32 bound printed in scientific notation; `int("1e+06")` raises, so
+    the previous digits-only parse silently dropped those bounds (trip
+    multiplier fell back to 1: a million-fold flop/byte undercount)."""
+    t = text.strip()
+    try:
+        return int(t)
+    except ValueError:
+        pass
+    try:
+        v = float(t)
+    except ValueError:
+        return None
+    if not math.isfinite(v):
+        return None
+    return int(v)
+
+
 def _loop_trip_count(cond_text: str) -> int:
     """Static trip count from a while condition: the integer constant used in
     the loop-bound compare (i < N).  Falls back to 1 if not found."""
     consts = {}
-    for m in re.finditer(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\d+)\)",
+    for m in re.finditer(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*"
+                         r"constant\((" + _SCALAR_NUM + r")\)",
                          cond_text):
-        consts[m.group(1)] = int(m.group(2))
+        v = _parse_scalar(m.group(2))
+        if v is not None and v > 0:
+            consts[m.group(1)] = v
     trips = []
     for m in re.finditer(r"compare\(([^)]*)\)[^\n]*direction=(LT|GT|LE|GE)",
                          cond_text):

@@ -83,13 +83,13 @@ def main():
         losses.append(float(metrics["loss"]))
         return state, metrics
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         state, steps, restarts = mgr.run(state, step_fn, data, args.steps,
                                          shardings=state_sh)
     finally:
         prefetch.stop()
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     if not losses:
         # resumed a checkpoint dir that already reached --steps: nothing to
         # replay (idempotent restart) — report and exit clean

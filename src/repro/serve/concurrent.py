@@ -118,7 +118,7 @@ class ConcurrentServeScheduler:
         requests are unaffected (the boost multiplies into pairs with
         n_waiting > 0 only); repeated calls between steps accumulate by
         max."""
-        vec = np.zeros(self.n_groups)
+        vec = np.zeros(self.n_groups, dtype=np.float32)
         for g in groups:
             if not 0 <= int(g) < self.n_groups:
                 raise ValueError(f"group {g} out of range")
@@ -128,8 +128,8 @@ class ConcurrentServeScheduler:
 
     def _pairs(self, stream: RequestStream):
         """<Node_un, P_mean> per group for one stream (paper Eq. 1)."""
-        n_un = np.zeros(self.n_groups)
-        p_sum = np.zeros(self.n_groups)
+        n_un = np.zeros(self.n_groups, dtype=np.float32)
+        p_sum = np.zeros(self.n_groups, dtype=np.float32)
         for r in stream.waiting:
             n_un[r.group] += 1
             p_sum[r.group] += r.urgency
@@ -145,8 +145,8 @@ class ConcurrentServeScheduler:
             for stream in streams:          # stamp first-seen (wait clock)
                 for r in stream.waiting:
                     self.metrics.on_seen(r, step)
-        node_un = np.zeros((len(streams), self.n_groups))
-        p_mean = np.zeros((len(streams), self.n_groups))
+        node_un = np.zeros((len(streams), self.n_groups), dtype=np.float32)
+        p_mean = np.zeros((len(streams), self.n_groups), dtype=np.float32)
         for i, stream in enumerate(streams):
             node_un[i], p_mean[i] = self._pairs(stream)
         if self._dirty_boost is not None:   # dirty-group injection, one step

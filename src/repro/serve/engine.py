@@ -22,10 +22,11 @@ class ServeEngine:
         return self.model.init_cache(batch=batch, max_len=self.max_len)
 
     def prefill(self, tokens, cache, patch_embeds=None):
+        # one cached jitted prefill serves both arities (separate trace
+        # entries, same wrapper) — a fresh jax.jit here would retrace per
+        # call (RPA005)
         if patch_embeds is not None:
-            return jax.jit(self.model.prefill, donate_argnums=(2,),
-                           static_argnums=())(self.params, tokens, cache,
-                                              patch_embeds)
+            return self._prefill(self.params, tokens, cache, patch_embeds)
         return self._prefill(self.params, tokens, cache)
 
     def decode(self, tokens, cache):

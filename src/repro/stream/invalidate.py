@@ -158,7 +158,7 @@ def _affected_reachable(n: int, fwd, seeds: List[int]) -> np.ndarray:
     from the broken edges' heads in the new view."""
     f_ptr, f_idx, _ = fwd
     affected = np.zeros(n, dtype=bool)
-    stack = [s for s in set(seeds)]
+    stack = sorted(set(seeds))  # RPA007: hash order must not reach state
     for s in stack:
         affected[s] = True
     while stack:
@@ -180,10 +180,13 @@ def reseed_min_plus(grp, fwd, rev, seeds: List[int],
     r_ptr, r_idx, _ = rev
     reseeded = 0
     union = np.zeros(n, dtype=bool)
+    # one batched sync for all jobs (RPA002: np.asarray(grp.values[j])
+    # inside the loop was one blocking transfer per active job)
+    values_h = np.asarray(jax.device_get(grp.values))
     for j in range(grp.capacity):
         if not grp.active[j]:
             continue
-        dist = np.asarray(grp.values[j]).reshape(-1)[:n]
+        dist = values_h[j].reshape(-1)[:n]
         init_v, init_d = grp.algs[j].init(g)
         iv = np.asarray(init_v).reshape(-1)[:n]
         if exact:

@@ -17,3 +17,30 @@ if importlib.util.find_spec("hypothesis") is None:
     _mod = importlib.util.module_from_spec(_spec)
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis"] = _mod
+
+
+# ---------------------------------------------------------------------------
+# runtime sentinels (repro.analysis.sentinels) as fixtures
+# ---------------------------------------------------------------------------
+
+import pytest  # noqa: E402  (after the path bootstrap, deliberately)
+
+
+@pytest.fixture
+def transfer_sentinel():
+    """Run the test body under jax.transfer_guard_device_to_host
+    ("disallow"): every device->host movement must be an explicit
+    jax.device_get — any implicit coercion (float(), .item(),
+    copy-forcing np.asarray) fails the test."""
+    from repro.analysis.sentinels import no_implicit_transfers
+    with no_implicit_transfers():
+        yield
+
+
+@pytest.fixture
+def retrace_pin():
+    """Factory fixture: `with retrace_pin(sess): ...` fails the test if
+    the session's jit cache gains unexpected keys or an already-compiled
+    entry re-traces inside the block."""
+    from repro.analysis.sentinels import retrace_sentinel
+    return retrace_sentinel

@@ -1,0 +1,117 @@
+"""Compiled-artifact contract checker self-tests.
+
+Lowers the REAL device superstep once (module-scoped — compile cost is
+paid once for the file) and asserts every contract holds on the current
+tree; then deliberately BREAKS the 1-sync invariant two ways (host
+callback injected into the HLO; while-loop stripped) and asserts the
+checker flags each, so a future regression can't pass by the checker
+going blind."""
+
+import math
+import types
+
+import pytest
+
+from repro.analysis import contracts as C
+
+jax = pytest.importorskip("jax")
+
+
+@pytest.fixture(scope="module")
+def inf_setup():
+    from repro.core import TwoLevel
+    sess = C._canonical_session()
+    policy = TwoLevel(backend="device", steps_per_sync=math.inf)
+    _, hlo = C.lower_device_superstep(sess, policy)
+    return sess, policy, hlo
+
+
+def test_device_inf_contracts_all_hold(inf_setup):
+    sess, policy, _ = inf_setup
+    results = C.check_device_contracts(sess, policy)
+    failures = [r for r in results if not r.ok]
+    assert not failures, "\n".join(f"{r.name}: {r.detail}"
+                                   for r in failures)
+    names = {r.name for r in results}
+    # the acceptance-criterion pair: 1 host sync + VMEM-budgeted kernels
+    assert {"one-sync", "one-sync-runtime", "vmem-budget"} <= names
+
+
+def test_run_host_syncs_is_exactly_one(inf_setup):
+    sess, policy, _ = inf_setup
+    m = sess.run(policy, 2000)
+    assert m.converged and m.host_syncs == 1
+
+
+def test_broken_one_sync_host_callback_flagged(inf_setup):
+    _, _, hlo = inf_setup
+    assert C.check_one_sync(hlo).ok
+    broken = hlo + ("\n  %cb = f32[] custom-call(), "
+                    "custom_call_target=\"xla_python_cpu_callback\"\n")
+    res = C.check_one_sync(broken)
+    assert not res.ok and "host-callback" in res.detail
+
+
+def test_broken_one_sync_outfeed_flagged(inf_setup):
+    _, _, hlo = inf_setup
+    broken = hlo + "\n  %of = token[] outfeed(%x, %tok)\n"
+    assert not C.check_one_sync(broken).ok
+
+
+def test_broken_one_sync_missing_while_flagged(inf_setup):
+    _, _, hlo = inf_setup
+    no_loop = hlo.replace(" while(", " call(").replace("=while(",
+                                                       "=call(")
+    res = C.check_one_sync(no_loop)
+    assert not res.ok and "while" in res.detail
+
+
+def test_no_f64_detects_injected_promotion(inf_setup):
+    _, _, hlo = inf_setup
+    assert C.check_no_f64(hlo).ok
+    assert not C.check_no_f64(hlo + "\n  %p = f64[4]{0} convert(%x)\n").ok
+
+
+def test_vmem_budget_formula_flags_oversized_tile():
+    from repro.kernels.mj_spmm.ops import _VMEM_BUDGET
+    # Vb=32 (the canonical block size) is comfortably inside budget
+    assert C.mj_spmm_vmem_bytes(2, 32) <= _VMEM_BUDGET
+    # a block size whose bare tile pair exceeds the budget must fail:
+    # the kernel cannot stage a single grid cell, job-chunking or not
+    big_vb = 2048   # 2 * Vb^2 * 4 = 32 MiB > 12 MiB budget
+    assert C.mj_spmm_vmem_bytes(2, big_vb) > _VMEM_BUDGET
+    fake = types.SimpleNamespace(view_groups=lambda: [
+        types.SimpleNamespace(
+            key="fake", capacity=2,
+            graph=types.SimpleNamespace(block_size=big_vb))])
+    results = C.check_vmem_budget(fake)
+    assert any(not r.ok for r in results)
+
+
+def test_tile_bytes_cross_check_flags_unaccountable_traffic(inf_setup):
+    _, _, hlo = inf_setup
+    good = types.SimpleNamespace(tile_loads=10, host_syncs=1)
+    assert C.check_tile_bytes(hlo, good, vb=32).ok
+    # a schedule claiming to stage more tiles than the program's HBM
+    # traffic can account for is lying about one of the two
+    absurd = types.SimpleNamespace(tile_loads=10**12, host_syncs=1)
+    assert not C.check_tile_bytes(hlo, absurd, vb=32).ok
+
+
+def test_host_programs_pure_and_f32():
+    results = C.check_host_programs()
+    failures = [r for r in results if not r.ok]
+    assert not failures, "\n".join(f"{r.name}: {r.detail}"
+                                   for r in failures)
+
+
+def test_finite_cadence_contracts_hold():
+    from repro.core import TwoLevel
+    sess = C._canonical_session()
+    results = C.check_device_contracts(
+        sess, TwoLevel(backend="device", steps_per_sync=4))
+    failures = [r for r in results if not r.ok]
+    assert not failures, "\n".join(f"{r.name}: {r.detail}"
+                                   for r in failures)
+    # finite cadence syncs once per chunk, not once per run
+    assert "one-sync-runtime" not in {r.name for r in results}

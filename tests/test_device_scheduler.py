@@ -248,19 +248,23 @@ def test_policy_backend_and_steps_per_sync_validation():
     assert Fused().backend == "device"
 
 
-def test_superstep_compiles_once_across_runs_and_resubmissions():
+def test_superstep_compiles_once_across_runs_and_resubmissions(
+        transfer_sentinel, retrace_pin):
     """Satellite: the old Fused.run re-traced its while_loop every call.
     The compiled step must be cached on the session and survive run(),
     resubmission into a recycled slot, and detach — one cache entry, and
-    jax must not re-trace (pinned via jax's own lowering counter)."""
+    jax must not re-trace (pinned via jax's own lowering counter).  The
+    whole scenario runs under the transfer sentinel (every sync must be
+    an explicit device_get) and runs 2-3 under the retrace sentinel."""
     sess = GraphSession(CSR, 32, capacity=2, seed=5)
     h0 = sess.submit(PageRank())
     assert sess.run(Fused(), 20000).converged
     sess.submit(PersonalizedPageRank(source=7))     # same capacity
-    assert sess.run(Fused(), 20000).converged
-    sess.detach(h0)
-    sess.submit(PageRank(damping=0.6))              # recycled slot
-    assert sess.run(Fused(), 20000).converged
+    with retrace_pin(sess):
+        assert sess.run(Fused(), 20000).converged
+        sess.detach(h0)
+        sess.submit(PageRank(damping=0.6))          # recycled slot
+        assert sess.run(Fused(), 20000).converged
     entries = [k for k in sess._jit_cache if k[0] == "superstep"]
     assert len(entries) == 1
     # three runs, one compilation: the jit object's trace cache holds a

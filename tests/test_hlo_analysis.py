@@ -48,6 +48,39 @@ def test_loop_trip_count_parser():
     assert H._loop_trip_count(cond) == 40
 
 
+def test_loop_trip_count_scientific_notation():
+    # XLA prints large / f32 loop bounds in scientific notation; the
+    # digits-only parse used to drop these (multiplier fell to 1)
+    cond = """
+  %constant.5 = f32[] constant(1e+06)
+  %compare.1 = pred[] compare(%get-tuple-element.3, %constant.5), direction=LT
+"""
+    assert H._loop_trip_count(cond) == 1_000_000
+    cond_mixed = """
+  %constant.5 = f32[] constant(2.5e+03)
+  %compare.1 = pred[] compare(%gte.3, %constant.5), direction=LT
+"""
+    assert H._loop_trip_count(cond_mixed) == 2500
+    cond_neg = """
+  %constant.5 = f32[] constant(-3)
+  %constant.6 = s32[] constant(12)
+  %compare.1 = pred[] compare(%gte.3, %constant.6), direction=LT
+"""
+    # negative bound is not a trip count; the integer one wins
+    assert H._loop_trip_count(cond_neg) == 12
+
+
+def test_parse_scalar_forms():
+    assert H._parse_scalar("40") == 40
+    assert H._parse_scalar("1e+06") == 1_000_000
+    assert H._parse_scalar("2.14748365e+09") == 2147483650
+    assert H._parse_scalar("3.5") == 3
+    assert H._parse_scalar("-7") == -7
+    assert H._parse_scalar("inf") is None
+    assert H._parse_scalar("nan") is None
+    assert H._parse_scalar("{1, 2}") is None
+
+
 def test_collective_wire_formulas():
     c = H.Collective(op="all-reduce", tensor_bytes=1000, group_size=4,
                      multiplier=1, computation="x")

@@ -182,21 +182,27 @@ def test_dirty_blocks_series_spikes_once_after_apply_updates():
 # --- compiled-out when off: the jit cache stays pinned ----------------------
 
 
-def test_telemetry_off_superstep_cache_is_untouched():
+def test_telemetry_off_superstep_cache_is_untouched(transfer_sentinel,
+                                                    retrace_pin):
     """Off-session: the cache key ends in capacity 0 and re-running never
-    re-traces (same _cache_size pin as the device-scheduler suite)."""
+    re-traces (same _cache_size pin as the device-scheduler suite); the
+    re-run is additionally pinned by the analysis sentinels — explicit
+    syncs only, zero cache growth."""
     sess = _session(telemetry=None)
     assert sess.run(Fused(), 500).converged
-    assert sess.run(Fused(), 500).converged
+    with retrace_pin(sess):
+        assert sess.run(Fused(), 500).converged
     entries = [k for k in sess._jit_cache if k[0] == "superstep"]
     assert len(entries) == 1 and entries[0][-1] == 0
     assert sess._jit_cache[entries[0]]._cache_size() == 1
 
 
-def test_telemetry_on_compiles_its_own_entry_without_retracing():
+def test_telemetry_on_compiles_its_own_entry_without_retracing(
+        retrace_pin):
     sess = _session(TelemetryConfig(capacity=64))
     assert sess.run(Fused(), 500).converged
-    assert sess.run(Fused(), 500).converged
+    with retrace_pin(sess):
+        assert sess.run(Fused(), 500).converged
     entries = [k for k in sess._jit_cache if k[0] == "superstep"]
     assert len(entries) == 1 and entries[0][-1] == 64
     assert sess._jit_cache[entries[0]]._cache_size() == 1
