@@ -12,14 +12,19 @@ and asserts contracts on the compiled HLO and the run it drives:
   no-f64          nothing in the program (or the host-backend pairs/counts
                   reductions) promotes to f64 — x64 is off, so an f64 in
                   the HLO means someone flipped it on and doubled traffic.
-  vmem-budget     the Pallas tile footprints (`mj_spmm` grid cell:
-                  tile + temp + 2 job stripes; `priority_pairs` cell:
-                  one Vb stripe + counters) fit `_VMEM_BUDGET` and the
-                  ~16 MB/core hardware ceiling for every view's Vb.
-  tile-bytes      a measured superstep's `RunMetrics.tile_loads`, priced
-                  at Vb^2 fp32 per staged tile, never exceeds the HBM
-                  traffic the compiled artifact can account for
-                  (hlo_analysis.estimate_hbm_bytes).
+  vmem-budget     the Pallas per-grid-cell footprints (`mj_spmm`: tile +
+                  temp + 2 job stripes; `fused_superstep`: pair tile +
+                  per-job state stripes + pair counters;
+                  `priority_pairs`: one Vb stripe + counters) fit the
+                  shared `kernels.common.VMEM_BUDGET` and the ~16 MB/core
+                  hardware ceiling for every view's Vb.
+  tile-bytes      a measured run's `RunMetrics.tile_pair_loads` — real
+                  nonzero (src, dst) block pairs moved, priced at Vb^2
+                  fp32 each — never exceeds the HBM traffic the compiled
+                  artifact can account for: the static body estimate
+                  (hlo_analysis.estimate_hbm_bytes) scaled by supersteps
+                  executed, since the convergence loop's trip count is a
+                  runtime argument the estimate cannot see.
   push-flops      the plus-times push is MXU-shaped: the lowered program
                   carries real dot flops (parse_dot_flops > 0), i.e. the
                   semiring product did not degrade to scalar gathers.
@@ -77,7 +82,7 @@ def lower_device_superstep(sess, policy, max_steps: int = 1024):
     state = (jnp.int32(0),
              tuple(g.values for g in groups),
              tuple(g.deltas for g in groups),
-             jnp.float32(0), jnp.float32(0),
+             jnp.float32(0), jnp.float32(0), jnp.float32(0),
              tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups),
              jnp.zeros(bn, jnp.float32),
              device_buffers(tel_cap, len(groups)) if tel_cap else ())
@@ -85,8 +90,9 @@ def lower_device_superstep(sess, policy, max_steps: int = 1024):
     tiles = tuple(g.graph.tiles for g in groups)
     nbrs = tuple(g.graph.nbr_ids for g in groups)
     ovs = tuple(g.overlay for g in groups)
+    prs = tuple(sess._pair_data(g) for g in groups)
     key = jax.random.PRNGKey(sess.seed)
-    lowered = step_fn.lower(state, scales, tiles, nbrs, ovs,
+    lowered = step_fn.lower(state, scales, tiles, nbrs, ovs, prs,
                             jnp.int32(max_steps), key)
     compiled = lowered.compile()
     return compiled, compiled.as_text()
@@ -141,6 +147,35 @@ def mj_spmm_vmem_bytes(capacity: int, vb: int) -> int:
     return 2 * vb * vb * 4 + 2 * jb * vb * 4
 
 
+def mj_spmm_hbm_fetch_bytes(q: int, k: int, capacity: int, vb: int) -> int:
+    """Input HBM bytes one mj_spmm dispatch actually fetches, counted per
+    grid step.  Grid (q, K, J/Jb) with jt INNERMOST: the adjacency tile's
+    index (i, kk) is unchanged across the inner jt sweep (one fetch per
+    (i, k) — the CAJS revisit), but the d-chunk's index (i, jt) changes
+    at every grid step, so d is re-fetched K times per job chunk — q * K
+    * (J/Jb) fetches, NOT one per (i, jt).  Only the J/Jb == 1 degenerate
+    grid keeps d resident across k (its index is then constant per i)."""
+    from repro.kernels.mj_spmm.ops import _pick_job_block
+    jb = _pick_job_block(capacity, vb)
+    jt = capacity // jb
+    d_fetches = q * jt if jt == 1 else q * k * jt
+    tile_fetches = q * k
+    return d_fetches * jb * vb * 4 + tile_fetches * vb * vb * 4
+
+
+def fused_superstep_vmem_bytes(capacity: int, vb: int,
+                               semiring: str) -> int:
+    """Per-grid-cell VMEM for the fused megakernel: pair tile [Vb,Vb] +
+    the per-job [Jb,Vb] state stripes (plus-times: d/base/accumulator;
+    min-plus adds values in+out and the candidate scratch) + the two
+    [Jb] pair counters, fp32 — the same arithmetic its `_pick_job_block`
+    budgets against."""
+    from repro.kernels.fused_superstep.ops import _pick_job_block
+    jb = _pick_job_block(capacity, vb, semiring)
+    stripes = 3 if semiring == "plus_times" else 6
+    return vb * vb * 4 + jb * (stripes * vb + 2) * 4
+
+
 def priority_pairs_vmem_bytes(vb: int) -> int:
     """Per-cell footprint of the priority_pairs kernel: one [Vb] priority
     stripe plus the (node_un, p_sum) accumulator pair, fp32."""
@@ -148,33 +183,48 @@ def priority_pairs_vmem_bytes(vb: int) -> int:
 
 
 def check_vmem_budget(sess) -> List[ContractResult]:
-    from repro.kernels.mj_spmm.ops import _VMEM_BUDGET
+    from repro.kernels.common import VMEM_BUDGET
     out: List[ContractResult] = []
     for g in sess.view_groups():
         vb = g.graph.block_size
         spmm = mj_spmm_vmem_bytes(g.capacity, vb)
         pairs = priority_pairs_vmem_bytes(vb)
-        budget = min(_VMEM_BUDGET, VMEM_HW_LIMIT)
-        ok = spmm <= budget and pairs <= budget
+        sem = getattr(g, "semiring", None) or "plus_times"
+        if sem not in ("plus_times", "min_plus"):
+            sem = "plus_times"
+        fused = fused_superstep_vmem_bytes(g.capacity, vb, sem)
+        budget = min(VMEM_BUDGET, VMEM_HW_LIMIT)
+        ok = spmm <= budget and pairs <= budget and fused <= budget
         out.append(ContractResult(
             "vmem-budget", ok,
-            f"view {g.key!r} Vb={vb}: mj_spmm {spmm} B, priority_pairs "
-            f"{pairs} B vs budget {budget} B"))
+            f"view {g.key!r} Vb={vb}: mj_spmm {spmm} B, fused_superstep "
+            f"{fused} B, priority_pairs {pairs} B vs budget {budget} B"))
     return out
 
 
 def check_tile_bytes(hlo: str, metrics, vb: int) -> ContractResult:
     """Cross-check the measured schedule against the compiled artifact:
-    tiles staged by the run (RunMetrics.tile_loads x Vb^2 fp32) must be
-    accountable within the HBM traffic the HLO can generate per
-    dispatch x the number of dispatches (host_syncs)."""
-    staged = int(metrics.tile_loads) * vb * vb * 4
-    capacity = H.estimate_hbm_bytes(hlo) * max(1, int(metrics.host_syncs))
+    the real adjacency bytes the run moved — RunMetrics.tile_pair_loads
+    nonzero (src, dst) block pairs at Vb^2 fp32 each, the sparse
+    BlockPairs accounting — must fit within the HBM traffic the HLO can
+    generate.  The lowered superstep's convergence while-loop has a
+    DYNAMIC trip count (max_steps is a runtime argument), so the static
+    estimate counts the loop body — one superstep — once; the program's
+    accountable traffic is therefore body-estimate x supersteps
+    executed.  (For finite-K cadences whose constant-trip scan is
+    already folded into the estimate this over-allows by K, which only
+    loosens an upper bound.)  Falls back to the coarser tile_loads /
+    host_syncs for metrics predating the pair accounting."""
+    n = int(getattr(metrics, "tile_pair_loads", 0) or metrics.tile_loads)
+    staged = n * vb * vb * 4
+    steps = int(getattr(metrics, "supersteps", 0) or metrics.host_syncs)
+    capacity = H.estimate_hbm_bytes(hlo) * max(1, steps)
     ok = staged <= capacity
     return ContractResult(
         "tile-bytes", ok,
-        f"measured tile_loads={int(metrics.tile_loads)} -> {staged} B "
-        f"staged vs {capacity} B HLO-accountable HBM traffic")
+        f"measured pair loads={n} -> {staged} B real adjacency bytes "
+        f"staged vs {capacity} B HLO-accountable HBM traffic "
+        f"({steps} supersteps)")
 
 
 def check_push_flops(hlo: str) -> ContractResult:
@@ -187,14 +237,16 @@ def check_push_flops(hlo: str) -> ContractResult:
                          "scalar fallback)"))
 
 
-def _canonical_session(seed: int = 0):
+def _canonical_session(seed: int = 0, use_pallas: bool = False):
     """Small two-view session (plus-times PageRank + min-plus SSSP) — the
-    same canonical shape the regression suites pin."""
+    same canonical shape the regression suites pin.  use_pallas=True
+    routes the push through the fused superstep megakernel (interpret
+    mode off-TPU), lowering the Pallas path into the checked program."""
     from repro.algorithms import PageRank, SSSP
     from repro.core import GraphSession
     from repro.graph import rmat_graph
     sess = GraphSession(rmat_graph(200, 5, seed=7), 32, capacity=2,
-                        seed=seed)
+                        seed=seed, use_pallas=use_pallas)
     sess.submit(PageRank())
     sess.submit(SSSP(source=0))
     return sess
@@ -247,7 +299,10 @@ def check_host_programs(sess=None) -> List[ContractResult]:
 
 
 def check_all() -> List[ContractResult]:
-    """The CI sweep: device inf-cadence + K=4 cadence + host programs."""
+    """The CI sweep: device inf-cadence + K=4 cadence + host programs,
+    then the same inf-cadence bundle with use_pallas=True — the fused
+    superstep megakernel lowered into the one-while-loop program (VMEM
+    budget, zero host callbacks, pair-based tile bytes)."""
     from repro.core import TwoLevel
     results: List[ContractResult] = []
     sess = _canonical_session()
@@ -257,4 +312,7 @@ def check_all() -> List[ContractResult]:
     results += check_device_contracts(
         sess2, TwoLevel(backend="device", steps_per_sync=4))
     results += check_host_programs(_canonical_session())
+    results += check_device_contracts(
+        _canonical_session(use_pallas=True),
+        TwoLevel(backend="device", steps_per_sync=math.inf))
     return results

@@ -83,6 +83,12 @@ HOST, DEVICE = "host", "device"
 class RunMetrics:
     supersteps: int = 0
     tile_loads: int = 0            # adjacency-block stagings (HBM->VMEM)
+    # real adjacency bytes: nonzero (src, dst) block pairs moved, summed
+    # over pushed view groups (tile_pair_loads * Vb^2 * 4 bytes) — the
+    # sparse BlockPairs refinement of tile_loads, which counts a staged
+    # block once across views regardless of how many of its K ELL slots
+    # are padding
+    tile_pair_loads: int = 0
     job_block_pushes: int = 0      # (job, block) processing events
     host_syncs: int = 0            # scheduling host<->device round-trips
     iterations_per_job: Optional[np.ndarray] = None
@@ -103,6 +109,7 @@ class RunMetrics:
         (no ad-hoc string parsing in either)."""
         d = {"supersteps": int(self.supersteps),
              "tile_loads": int(self.tile_loads),
+             "tile_pair_loads": int(self.tile_pair_loads),
              "job_block_pushes": int(self.job_block_pushes),
              "host_syncs": int(self.host_syncs),
              "converged": bool(self.converged),
@@ -232,6 +239,11 @@ def _run_host(policy: SchedulePolicy, sess,
     telemetry never adds a host sync."""
     groups = sess.view_groups()
     offs = np.cumsum([0] + [g.capacity for g in groups])
+    grp_pairs = [sess._pair_data(g) for g in groups]
+    # host mirror of the per-source-block real-pair counts (explicit
+    # device_get: the driver may run under the transfer sentinel)
+    nnz_host = [np.asarray(x) for x in
+                jax.device_get([p.src_nnz for p in grp_pairs])]
     m = RunMetrics(
         iterations_per_job=np.zeros(int(offs[-1]), dtype=np.int64))
     telemetry = getattr(sess, "telemetry", None) is not None
@@ -341,16 +353,24 @@ def _run_host(policy: SchedulePolicy, sess,
             if selection.shared:
                 sel = jnp.asarray(selection.sel)
                 msk = jnp.asarray(selection.msk)
+                sel_np = np.asarray(selection.sel)
+                on_np = np.asarray(selection.msk) > 0
                 for gi, g in enumerate(groups):
                     if not actives[gi].any():
                         continue
+                    m.tile_pair_loads += int(
+                        nnz_host[gi][sel_np][on_np].sum())
                     g.values, g.deltas = sess._push_shared_fn(g)(
                         g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                        sel, msk, g.push_scale, g.overlay)
+                        sel, msk, g.push_scale, g.overlay, grp_pairs[gi])
             else:
                 for gi, g in enumerate(groups):
                     if not actives[gi].any():
                         continue
+                    sel_np = np.asarray(selection.sel[gi])
+                    on_np = np.asarray(selection.msk[gi]) > 0
+                    m.tile_pair_loads += int(
+                        (nnz_host[gi][sel_np] * on_np).sum())
                     g.values, g.deltas = sess._push_indep_fn(g)(
                         g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
                         jnp.asarray(selection.sel[gi]),
@@ -378,12 +398,14 @@ def build_device_step(policy: SchedulePolicy, sess):
     """Compile the session's superstep for `policy` into one jitted step
     function.  Returned callable:
 
-        step_fn(state, scales, tiles, nbrs, overlays, max_steps, key)
-            -> (state, unconverged_total)
+        step_fn(state, scales, tiles, nbrs, overlays, pairs, max_steps,
+                key) -> (state, unconverged_total)
 
     where state = (it, values_tuple, deltas_tuple, loads, pushes,
-    iters_tuple, boost, telemetry_buffers).  Finite steps_per_sync runs a
-    lax.scan of that
+    pair_loads, iters_tuple, boost, telemetry_buffers) and `pairs` is the
+    per-group `BlockPairs` tuple (the fused megakernel's adjacency view;
+    `pair_loads` accumulates the real block pairs moved by pushed
+    groups).  Finite steps_per_sync runs a lax.scan of that
     many gated supersteps (a step no-ops — and counts nothing — once all
     jobs converge or the budget is spent); steps_per_sync=inf runs a
     lax.while_loop to the fixpoint.  Graph tiles / neighbour ids / push
@@ -426,8 +448,8 @@ def build_device_step(policy: SchedulePolicy, sess):
                 algs[gi].unconverged(vs[gi], ds[gi]).astype(jnp.int32))
         return tot
 
-    def superstep(carry, scales, tiles, nbrs, ovs, key):
-        it, vs, ds, loads, pushes, iters, boost, tel = carry
+    def superstep(carry, scales, tiles, nbrs, ovs, prs, key):
+        it, vs, ds, loads, pushes, pair_loads, iters, boost, tel = carry
         node_uns, p_means, actives = [], [], []
         for gi in range(n_groups):
             if needs_pairs:
@@ -464,16 +486,22 @@ def build_device_step(policy: SchedulePolicy, sess):
                                                             ds[gi]))
                            for gi in range(n_groups)]))
         new_vs, new_ds, new_iters = [], [], []
+        pair_step = jnp.float32(0)
         for gi in range(n_groups):
             if selection.shared:
                 v2, d2 = shared_push[gi](
                     vs[gi], ds[gi], tiles[gi], nbrs[gi],
-                    selection.sel, selection.msk, scales[gi], ovs[gi])
+                    selection.sel, selection.msk, scales[gi], ovs[gi],
+                    prs[gi])
+                pair_cnt = jnp.sum(prs[gi].src_nnz[selection.sel]
+                                   * (selection.msk > 0))
             else:
                 v2, d2 = indep_push[gi](
                     vs[gi], ds[gi], tiles[gi], nbrs[gi],
                     selection.sel[gi], selection.msk[gi], scales[gi],
                     ovs[gi])
+                pair_cnt = jnp.sum(prs[gi].src_nnz[selection.sel[gi]]
+                                   * (selection.msk[gi] > 0))
             # a fully-converged group is never pushed, exactly as in the
             # host driver: freezing it keeps sub-tolerance plus-times
             # residual mass where convergence left it (min-plus pushes
@@ -482,19 +510,22 @@ def build_device_step(policy: SchedulePolicy, sess):
             new_vs.append(jnp.where(keep, v2, vs[gi]))
             new_ds.append(jnp.where(keep, d2, ds[gi]))
             new_iters.append(iters[gi] + actives[gi].astype(jnp.int32))
+            pair_step = pair_step + (keep.astype(jnp.float32)
+                                     * pair_cnt.astype(jnp.float32))
         # dtype contract: device selections carry int32 scalars; the carry
         # accumulates in float32 (int32 would wrap on billion-push runs,
         # float32 only rounds past 2^24)
         return (it + 1, tuple(new_vs), tuple(new_ds),
                 loads + selection.tile_loads.astype(jnp.float32),
                 pushes + selection.job_block_pushes.astype(jnp.float32),
+                pair_loads + pair_step,
                 tuple(new_iters),
                 jnp.zeros_like(boost),   # injection consumed: one superstep
                 tel)
 
-    def step_fn(state, scales, tiles, nbrs, ovs, max_steps, key):
+    def step_fn(state, scales, tiles, nbrs, ovs, prs, max_steps, key):
         def body(c):
-            return superstep(c, scales, tiles, nbrs, ovs, key)
+            return superstep(c, scales, tiles, nbrs, ovs, prs, key)
 
         def live(c):
             return (unconverged_total(c[1], c[2]) > 0) & (c[0] < max_steps)
@@ -533,7 +564,7 @@ def _run_device(policy: SchedulePolicy, sess,
     state = (jnp.int32(0),
              tuple(g.values for g in groups),
              tuple(g.deltas for g in groups),
-             jnp.float32(0), jnp.float32(0),
+             jnp.float32(0), jnp.float32(0), jnp.float32(0),
              tuple(jnp.zeros(g.capacity, jnp.int32) for g in groups),
              jnp.zeros(bn, jnp.float32) if boost is None
              else jnp.asarray(boost, jnp.float32),
@@ -542,6 +573,7 @@ def _run_device(policy: SchedulePolicy, sess,
     tiles = tuple(g.graph.tiles for g in groups)
     nbrs = tuple(g.graph.nbr_ids for g in groups)
     ovs = tuple(g.overlay for g in groups)
+    prs = tuple(sess._pair_data(g) for g in groups)
     # the budget the device compares against must be the SAME clamped
     # value the host loop tests, or a >int32 budget could spin forever
     budget = int(min(max_supersteps, np.iinfo(np.int32).max))
@@ -552,8 +584,8 @@ def _run_device(policy: SchedulePolicy, sess,
     while True:
         t_chunk = trace.now_us() if trace else 0.0
         with _profiler_span(sess, "device_chunk"):
-            state, un = step_fn(state, scales, tiles, nbrs, ovs, max_steps,
-                                key)
+            state, un = step_fn(state, scales, tiles, nbrs, ovs, prs,
+                                max_steps, key)
             # the ONE host sync of the chunk: explicit, batched, and the
             # only transfer a transfer_guard("disallow") run will see
             it_h, un_h = map(int, jax.device_get((state[0], un)))
@@ -568,15 +600,16 @@ def _run_device(policy: SchedulePolicy, sess,
     for gi, g in enumerate(groups):
         g.values, g.deltas = state[1][gi], state[2][gi]
     m.supersteps = it_h
-    loads_h, pushes_h, iters_h = jax.device_get(
-        (state[3], state[4], state[5]))
+    loads_h, pushes_h, pair_loads_h, iters_h = jax.device_get(
+        (state[3], state[4], state[5], state[6]))
     m.tile_loads = int(loads_h)
     m.job_block_pushes = int(pushes_h)
+    m.tile_pair_loads = int(pair_loads_h)
     m.converged = un_h == 0
     m.iterations_per_job = np.concatenate(
         [np.asarray(x, dtype=np.int64) for x in iters_h])
     if tel_cap:
-        m.telemetry = series_from_device(state[7], it_h,
+        m.telemetry = series_from_device(state[8], it_h,
                                          [g.key for g in groups])
     return m
 

@@ -150,42 +150,102 @@ def compute_pairs(alg: Algorithm, values: jnp.ndarray, deltas: jnp.ndarray):
 def shared_push_fn(semiring: str, push_one, use_pallas: bool):
     """Stacked-job CAJS push callable (un-jitted): all jobs process the
     same [q] selection plus the shared overlay (in_axes None — one
-    staging serves every job).  The ONE place the pallas-vs-vmap dispatch
+    staging serves every job).  The ONE place the kernel-vs-jnp dispatch
     and the in_axes wiring live — jitted+cached by GraphSession for the
     host driver, inlined into the compiled superstep by the device
-    driver."""
-    if use_pallas:
-        from functools import partial
-        from repro.kernels.mj_spmm import ops as mj_ops
-        base = partial(mj_ops.push_shared, semiring=semiring)
+    driver.
 
-        def fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay):
-            # the kernel computes the base-tile push; the overlay ride-along
-            # stays in jnp (bandwidth-bound on state, not adjacency).  The
-            # overlay must see the PRE-consumption deltas, gathered before
-            # the base push zeroes/infs them.
-            if overlay is None or overlay.capacity == 0:
-                return base(values, deltas, tiles, nbr_ids, sel, msk, scales)
-            consumed = _block_mask(sel, msk, values.shape[1])[None, :, None]
-            if semiring == "plus_times":
-                raw = jnp.where(consumed, deltas, 0.0)
-                d_sel = (raw[:, sel, :] * scales[:, None, None]
-                         * msk[None, :, None])              # [J, q, Vb]
-                values, deltas = base(values, deltas, tiles, nbr_ids,
-                                      sel, msk, scales)
-                return values, jax.vmap(
-                    overlay_push_plus, in_axes=(0, 0, None, None))(
-                        deltas, d_sel, overlay, sel)
-            d_sel = jnp.where(consumed, deltas, jnp.inf)[:, sel, :]
-            d_sel = jnp.where(msk[None, :, None] > 0, d_sel, jnp.inf)
-            values, deltas = base(values, deltas, tiles, nbr_ids,
-                                  sel, msk, scales)
-            return jax.vmap(
-                overlay_push_min, in_axes=(0, 0, 0, None, None))(
-                    values, deltas, d_sel, overlay, sel)
+    Returns fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay,
+    pairs) with `pairs` the view's `graph.BlockPairs`:
+
+      use_pallas=True   the fused_superstep Pallas megakernel sweeps the
+                        destination-sorted pairs (select/stage/push/
+                        priority fused per dst block); the overlay
+                        ride-along stays in jnp on the PRE-consumption
+                        deltas, exactly like every other push path.
+      use_pallas=False  plus-times emulates the same pair sweep in jnp
+                        with a per-(job, pair) einsum + scatter-add.
+                        Deliberately NOT `pairs.dense_op`: a [J, N] @
+                        [N, N] matmul lets XLA pick a J-dependent
+                        contraction blocking, which breaks the bit-for-
+                        bit job-axis sharding invariance dist.graph
+                        guarantees.  min-plus keeps the vmapped per-job
+                        `push_one` (its sequential min-scan is the
+                        bitwise anchor the fixpoint tests pin).
+      pairs=None        falls back to the vmapped `push_one` (block-ELL
+                        staging), for callers without a pair view.
+    """
+    vm = jax.vmap(push_one, in_axes=(0, 0, None, None, None, None, 0, None))
+    if use_pallas:
+        from repro.kernels.fused_superstep import ops as fused_ops
+
+        def fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay,
+               pairs):
+            if pairs is None:         # no pair view: block-ELL fallback
+                return vm(values, deltas, tiles, nbr_ids, sel, msk, scales,
+                          overlay)
+            del tiles, nbr_ids        # the pair view replaces ELL staging
+            # the overlay must see the PRE-consumption deltas, gathered
+            # before the kernel zeroes/infs them
+            ride = overlay is not None and overlay.capacity
+            if ride:
+                consumed = _block_mask(sel, msk,
+                                       values.shape[1])[None, :, None]
+                if semiring == "plus_times":
+                    raw = jnp.where(consumed, deltas, 0.0)
+                    d_sel = (raw[:, sel, :] * scales[:, None, None]
+                             * msk[None, :, None])          # [J, q, Vb]
+                else:
+                    d_sel = jnp.where(consumed, deltas, jnp.inf)[:, sel, :]
+                    d_sel = jnp.where(msk[None, :, None] > 0, d_sel,
+                                      jnp.inf)
+            values, deltas = fused_ops.fused_push(
+                values, deltas, pairs, sel, msk, scales, semiring=semiring)
+            if ride:
+                if semiring == "plus_times":
+                    deltas = jax.vmap(
+                        overlay_push_plus, in_axes=(0, 0, None, None))(
+                            deltas, d_sel, overlay, sel)
+                else:
+                    values, deltas = jax.vmap(
+                        overlay_push_min, in_axes=(0, 0, 0, None, None))(
+                            values, deltas, d_sel, overlay, sel)
+            return values, deltas
 
         return fn
-    return jax.vmap(push_one, in_axes=(0, 0, None, None, None, None, 0, None))
+
+    if semiring != "plus_times":
+        def fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay,
+               pairs):
+            del pairs
+            return vm(values, deltas, tiles, nbr_ids, sel, msk, scales,
+                      overlay)
+
+        return fn
+
+    def fn(values, deltas, tiles, nbr_ids, sel, msk, scales, overlay,
+           pairs):
+        if pairs is None:
+            return vm(values, deltas, tiles, nbr_ids, sel, msk, scales,
+                      overlay)
+        bn = values.shape[1]
+        selb = _block_mask(sel, msk, bn)[None, :, None]
+        raw = jnp.where(selb, deltas, 0.0)
+        d = raw * scales[:, None, None]
+        base = deltas - raw
+        contrib = jnp.einsum("jpv,pvw->jpw", d[:, pairs.src, :],
+                             pairs.tiles)
+        out = base.at[:, pairs.dst, :].add(contrib, mode="drop")
+        values = values + raw
+        deltas = out
+        if overlay is not None and overlay.capacity:
+            d_sel = d[:, sel, :] * msk[None, :, None]       # [J, q, Vb]
+            deltas = jax.vmap(
+                overlay_push_plus, in_axes=(0, 0, None, None))(
+                    deltas, d_sel, overlay, sel)
+        return values, deltas
+
+    return fn
 
 
 def indep_push_fn(push_one):

@@ -102,6 +102,11 @@ class ViewGroup:
     pair_slot: Optional[Dict] = None   # {(src block, dst block): slot}
     ov_used: Optional[np.ndarray] = None   # [B_N, C] bool
     ov_entry: Optional[Dict] = None    # {(u, v) padded ids: (block, col)}
+    # destination-sorted sparse block-pair view of `graph` (the fused
+    # megakernel's adjacency + the real-bytes tile_pair_loads accounting)
+    # — built lazily by session._pair_data, dropped to None whenever the
+    # tiles change (stream structural edits, compaction)
+    pairs: Optional[object] = None
 
     @property
     def capacity(self) -> int:
@@ -534,6 +539,16 @@ class GraphSession:
                     lambda v, d: jnp.sum(alg.unconverged(v, d),
                                          axis=(1, 2)))
         return self._jit_cache[key]
+
+    def _pair_data(self, grp: ViewGroup):
+        """The view's destination-sorted `BlockPairs`, built lazily from
+        the CURRENT tiles and cached on the group; stream structural
+        edits / compaction invalidate it (set `grp.pairs = None`) so the
+        next run rebuilds from the edited tiles."""
+        if grp.pairs is None:
+            from repro.graph.structure import build_block_pairs
+            grp.pairs = build_block_pairs(grp.graph)
+        return grp.pairs
 
     def _push_shared_fn(self, grp: ViewGroup):
         """All jobs of the view process the same selected blocks (CAJS)."""

@@ -112,6 +112,27 @@ def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
                 dst=_replicated(mesh, grp.overlay.dst),
                 w=_replicated(mesh, grp.overlay.w),
                 mask=_replicated(mesh, grp.overlay.mask))
+        # the destination-sorted block-pair view is shared adjacency data
+        # exactly like the tiles: build it now (from the just-replicated
+        # tiles) and replicate every leaf, so the fused megakernel sweep
+        # stages each pair once per device for its local jobs.
+        # dense_op is DROPPED under a mesh: the engine never pushes
+        # through it (a [J, N] @ [N, N] matmul would let XLA pick a
+        # J-dependent contraction blocking, breaking the bit-for-bit
+        # sharding invariance this module guarantees — the pair einsum /
+        # scatter reduces per (job, pair) independently instead), so
+        # replicating an [N, N] dense operator would waste HBM.
+        bp = session._pair_data(grp)
+        grp.pairs = _dc.replace(
+            bp,
+            src=_replicated(mesh, bp.src), dst=_replicated(mesh, bp.dst),
+            slot=_replicated(mesh, bp.slot),
+            first=_replicated(mesh, bp.first),
+            last=_replicated(mesh, bp.last),
+            src_nnz=_replicated(mesh, bp.src_nnz),
+            dst_touched=_replicated(mesh, bp.dst_touched),
+            tiles=_replicated(mesh, bp.tiles),
+            dense_op=None)
     return session
 
 

@@ -1,13 +1,16 @@
-from repro.graph.structure import (CSRGraph, BlockedGraph, TileOverlay,
-                                   build_blocked, empty_overlay)
+from repro.graph.structure import (CSRGraph, BlockedGraph, BlockPairs,
+                                   TileOverlay, build_blocked,
+                                   build_block_pairs, empty_overlay)
 from repro.graph.generators import (rmat_graph, uniform_graph, chain_graph,
                                     grid_graph, mutation_stream)
 
 __all__ = [
     "CSRGraph",
     "BlockedGraph",
+    "BlockPairs",
     "TileOverlay",
     "build_blocked",
+    "build_block_pairs",
     "empty_overlay",
     "rmat_graph",
     "uniform_graph",

@@ -132,6 +132,128 @@ class BlockedGraph:
 
 
 @dataclasses.dataclass
+class BlockPairs:
+    """Destination-sorted sparse block-pair view of a BlockedGraph.
+
+    The block-ELL layout pads every source block to K neighbour slots, so
+    a dense sweep stages zero-tiles as real bytes.  This view materializes
+    ONLY the nonzero (src_block, dst_block) pairs, sorted by destination
+    (NXgraph's destination-sorted sub-shards): consecutive pairs share a
+    destination block, so a kernel sweeping the list in order revisits
+    each output block while it is still VMEM-resident — one accumulation
+    run and ONE flush per destination block (kernels.fused_superstep).
+
+      src   [P] int32    source block of each pair
+      dst   [P] int32    destination block, NON-DECREASING (dst-sorted)
+      slot  [P] int32    the pair's ELL slot k (tiles[src, slot] is its tile)
+      first [P] int32    1 at the first pair of each dst run (init point)
+      last  [P] int32    1 at the last pair of each dst run (flush point)
+      src_nnz [B_N] int32   real pairs per SOURCE block — staging block b
+                            moves src_nnz[b] * Vb^2 * 4 real adjacency
+                            bytes, the quantity `tile_pair_loads` accounts
+      dst_touched [B_N] bool  blocks that appear as a destination (pairs
+                              never write the others; callers pass state
+                              through for them)
+      tiles [P, Vb, Vb] f32   contiguous dst-sorted copy of the pair tiles
+      dense_op  [B_N*Vb, B_N*Vb] f32 or None — the full adjacency operator
+                (row u, col v = weight of edge u->v), built only for
+                plus-times views (fill == 0.0) dense enough to fit the
+                byte cap.  A REFERENCE view for tests and contract
+                checks: the engine pushes through the pair einsum /
+                scatter (a [J, N] @ [N, N] matmul would let XLA pick a
+                J-dependent contraction blocking, breaking the bit-for-
+                bit job-axis sharding invariance dist.graph pins), and
+                dist.graph drops it under a mesh.
+
+    An edgeless graph keeps P >= 1 with one inert pad pair (src=dst=0,
+    all-`fill` tile — an exact no-op in both semirings, src_nnz all 0).
+    """
+
+    num_pairs: int
+    block_size: int
+    num_blocks: int
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    slot: jnp.ndarray
+    first: jnp.ndarray
+    last: jnp.ndarray
+    src_nnz: jnp.ndarray
+    dst_touched: jnp.ndarray
+    tiles: jnp.ndarray
+    dense_op: Optional[jnp.ndarray] = None
+
+    def tree_flatten(self):
+        leaves = (self.src, self.dst, self.slot, self.first, self.last,
+                  self.src_nnz, self.dst_touched, self.tiles, self.dense_op)
+        aux = (self.num_pairs, self.block_size, self.num_blocks)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*aux, *leaves)
+
+
+#: build_block_pairs materializes `dense_op` only when the block graph is
+#: at least this dense (P / B_N^2) AND the operator stays under the byte
+#: cap — past either bound the pair list is the only materialization
+DENSE_OP_MIN_DENSITY = 0.25
+DENSE_OP_MAX_BYTES = 64 * 2**20
+
+
+def build_block_pairs(g: BlockedGraph, *,
+                      dense_min_density: float = DENSE_OP_MIN_DENSITY,
+                      dense_max_bytes: int = DENSE_OP_MAX_BYTES
+                      ) -> BlockPairs:
+    """Destination-sorted real-pair view of `g` (see BlockPairs).
+
+    Pure function of the CURRENT tiles: evolving views (repro.stream)
+    rebuild it after in-place tile edits / compaction — the pair tiles
+    are a copy, not an alias."""
+    import jax
+    # explicit device_get: pair building is host-side enumeration and may
+    # run under the transfer sentinel (analysis.sentinels)
+    ids, msk = map(np.asarray, jax.device_get((g.nbr_ids, g.nbr_mask)))
+    bn, vb = g.num_blocks, g.block_size
+    sb, slot = np.nonzero(msk)
+    db = ids[sb, slot]
+    src_nnz = np.bincount(sb, minlength=bn).astype(np.int32)
+    if len(sb) == 0:
+        # inert pad pair: an all-fill tile is an exact no-op (plus-times
+        # adds 0.0, min-plus mins +inf), so P stays >= 1 for fixed shapes
+        return BlockPairs(
+            num_pairs=1, block_size=vb, num_blocks=bn,
+            src=jnp.zeros(1, jnp.int32), dst=jnp.zeros(1, jnp.int32),
+            slot=jnp.zeros(1, jnp.int32), first=jnp.ones(1, jnp.int32),
+            last=jnp.ones(1, jnp.int32),
+            src_nnz=jnp.asarray(src_nnz),
+            dst_touched=jnp.zeros(bn, bool),
+            tiles=jnp.full((1, vb, vb), g.fill, jnp.float32))
+    order = np.lexsort((sb, db))          # dst-major, src ascending within
+    sb, db, slot = sb[order], db[order], slot[order]
+    first = np.ones(len(sb), np.int32)
+    first[1:] = (db[1:] != db[:-1]).astype(np.int32)
+    last = np.ones(len(sb), np.int32)
+    last[:-1] = first[1:]
+    touched = np.zeros(bn, bool)
+    touched[db] = True
+    tiles = g.tiles[jnp.asarray(sb), jnp.asarray(slot)]   # [P, Vb, Vb] copy
+    dense_op = None
+    density = len(sb) / float(bn * bn)
+    if (g.fill == 0.0 and density >= dense_min_density
+            and (bn * vb) ** 2 * 4 <= dense_max_bytes):
+        op = jnp.zeros((bn, vb, bn, vb), jnp.float32)
+        op = op.at[jnp.asarray(sb), :, jnp.asarray(db), :].set(tiles)
+        dense_op = op.reshape(bn * vb, bn * vb)
+    return BlockPairs(
+        num_pairs=len(sb), block_size=vb, num_blocks=bn,
+        src=jnp.asarray(sb, jnp.int32), dst=jnp.asarray(db, jnp.int32),
+        slot=jnp.asarray(slot, jnp.int32),
+        first=jnp.asarray(first), last=jnp.asarray(last),
+        src_nnz=jnp.asarray(src_nnz), dst_touched=jnp.asarray(touched),
+        tiles=tiles, dense_op=dense_op)
+
+
+@dataclasses.dataclass
 class TileOverlay:
     """Bounded per-block delta-COO staged alongside the base tiles.
 
@@ -190,6 +312,8 @@ jax.tree_util.register_pytree_node(
     BlockedGraph, BlockedGraph.tree_flatten, BlockedGraph.tree_unflatten)
 jax.tree_util.register_pytree_node(
     TileOverlay, TileOverlay.tree_flatten, TileOverlay.tree_unflatten)
+jax.tree_util.register_pytree_node(
+    BlockPairs, BlockPairs.tree_flatten, BlockPairs.tree_unflatten)
 
 
 def build_blocked(csr: CSRGraph, block_size: int, *,

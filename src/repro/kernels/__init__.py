@@ -1,7 +1,14 @@
 # Pallas TPU kernels for the paper's compute hot-spots:
-#   mj_spmm        - multi-job block SpMM (CAJS in hardware: one VMEM-staged
-#                    adjacency tile serves all J jobs; plus-times on the MXU,
-#                    min-plus on the VPU)
-#   priority_pairs - fused <Node_un, P_mean> pair reduction per (job, block)
-# Each has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper),
-# ref.py (pure-jnp oracle).
+#   mj_spmm         - multi-job block SpMM (CAJS in hardware: one VMEM-staged
+#                     adjacency tile serves all J jobs; plus-times on the MXU,
+#                     min-plus on the VPU)
+#   priority_pairs  - fused <Node_un, P_mean> pair reduction per (job, block)
+#   fused_superstep - the whole shared push as ONE megakernel over the
+#                     destination-sorted sparse block-pair list
+#                     (graph.BlockPairs): select -> stage -> multi-job push ->
+#                     priority-pair update, double-buffered tile prefetch via
+#                     the Pallas grid pipeline, output-block revisit residency
+#   common          - shared VMEM budget + the ONE interpret-resolution rule
+#                     (interpret=None -> interpret iff backend != "tpu")
+# Each kernel dir has kernel.py (pl.pallas_call + BlockSpec), ops.py (jit
+# wrapper), ref.py (pure-jnp oracle).

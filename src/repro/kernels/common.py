@@ -1,0 +1,35 @@
+"""Kernel dispatch policy shared by every Pallas kernel in the repo.
+
+One source of truth for two decisions each kernel wrapper must make:
+
+  interpret   Pallas kernels compile for TPU; everywhere else they run in
+              interpreter mode (pure jax ops, still jittable).  Callers
+              pass ``interpret=None`` and get `default_interpret()` — a
+              literal ``interpret=True`` default would silently pin the
+              interpreter even on TPU (the bug ISSUE 8 fixes).
+  VMEM        the per-grid-cell footprint budget all job-chunk pickers
+              (`_pick_job_block` style) size against.  Kept below the
+              ~16 MB/core hardware ceiling so the pipelined double
+              buffers of two consecutive grid cells coexist.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+#: per-grid-cell VMEM budget (bytes) for job-chunk sizing
+VMEM_BUDGET = 12 * 2**20
+
+
+def default_interpret() -> bool:
+    """True unless we are actually on TPU: Mosaic lowering exists only
+    there, every other backend runs the Pallas interpreter."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve a kernel wrapper's ``interpret`` argument: None defers to
+    backend detection, an explicit bool wins (tests force True)."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -1,0 +1,6 @@
+from repro.kernels.fused_superstep.kernel import fused_superstep_call
+from repro.kernels.fused_superstep.ops import fused_push, _pick_job_block
+from repro.kernels.fused_superstep.ref import fused_superstep_ref
+
+__all__ = ["fused_superstep_call", "fused_push", "fused_superstep_ref",
+           "_pick_job_block"]

@@ -1,0 +1,195 @@
+"""Fused CAJS superstep megakernel over sparse block pairs.
+
+One Pallas program per (job-chunk, block-pair) fuses the paper's whole
+inner loop — stage the staged-selection deltas, push them for EVERY
+concurrent job, and update the block priority pairs — without HBM
+round-trips between the stages:
+
+  grid (J/Jb, P)   p innermost over `BlockPairs` order: pairs are
+                   DESTINATION-sorted, so consecutive p share the output
+                   block.  Pallas keeps a block resident while its
+                   index_map output is unchanged, so the accumulator for
+                   a destination block lives in VMEM across its whole
+                   run of pairs and is flushed to HBM exactly once.
+                   The grid pipeline double-buffers the next pair's
+                   adjacency tile fetch behind the current dot/min.
+  scalar prefetch  (src, dst, first, last) pair metadata is prefetched
+                   as scalars (PrefetchScalarGridSpec) and drives the
+                   data-dependent index_maps.
+  @pl.when(first)  initialize the accumulator from the consumed base
+                   (plus-times) / reset the min candidate (min-plus).
+  @pl.when(last)   flush: final deltas (min-plus also values), plus the
+                   fused priority update — per-(job, dst-block)
+                   <Node_un, P_sum> from the post-push deltas, the exact
+                   quantities `core.priority.block_pairs` reduces.
+
+Selection is encoded entirely in the operand: the wrapper masks
+non-selected source rows to the semiring identity (0 / +inf), so their
+contributions vanish EXACTLY and no validity flags enter the kernel —
+padded selection slots can alias block 0 without re-pushing it.
+
+plus-times accumulates on the MXU ([Jb, Vb] @ [Vb, Vb]); min-plus has no
+MXU analogue and min-folds on the VPU with a per-job row loop bounding
+temporaries at Vb*Vb.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_plus_kernel(tolerance: float):
+    # tolerance is a STATIC factory arg (jit static_argnames upstream), so
+    # float() runs at trace time on a python scalar — the literal inlines
+    # into the kernel jaxpr instead of becoming a rejected captured constant
+    tol = float(tolerance)  # noqa: RPA001
+
+    def kernel(psrc, pdst, pfirst, plast,        # scalar-prefetch refs
+               d_ref, base_ref, t_ref,           # [Jb,1,Vb] x2, [1,Vb,Vb]
+               o_ref, nu_ref, ps_ref):           # [Jb,1,Vb], [Jb,1] x2
+        p = pl.program_id(1)
+
+        @pl.when(pfirst[p] == 1)
+        def _init():
+            o_ref[:, 0, :] = base_ref[:, 0, :]
+
+        o_ref[:, 0, :] += jnp.dot(d_ref[:, 0, :], t_ref[0],
+                                  preferred_element_type=jnp.float32)
+
+        @pl.when(plast[p] == 1)
+        def _flush():
+            a = jnp.abs(o_ref[:, 0, :])
+            pr = jnp.where(a >= tol, a, 0.0)     # Algorithm.vertex_priority
+            un = (pr > 0.0).astype(jnp.float32)
+            nu_ref[:, 0] = jnp.sum(un, axis=1)
+            ps_ref[:, 0] = jnp.sum(pr, axis=1)
+
+    return kernel
+
+
+def _make_min_kernel(tolerance: float):
+    del tolerance                                # min-plus priority is tol-free
+
+    def kernel(psrc, pdst, pfirst, plast,
+               d_ref, vbase_ref, dbase_ref, t_ref,
+               vo_ref, do_ref, nu_ref, ps_ref,
+               cand):                            # VMEM scratch [Jb, Vb]
+        p = pl.program_id(1)
+
+        @pl.when(pfirst[p] == 1)
+        def _init():
+            cand[...] = jnp.full(cand.shape, jnp.inf, jnp.float32)
+
+        t = t_ref[0]
+        jb = d_ref.shape[0]
+
+        def body(jj, _):
+            row = d_ref[jj, 0, :]                                 # [Vb]
+            cand[jj, :] = jnp.minimum(cand[jj, :],
+                                      jnp.min(row[:, None] + t, axis=0))
+            return 0
+
+        jax.lax.fori_loop(0, jb, body, 0)
+
+        @pl.when(plast[p] == 1)
+        def _flush():
+            v_old = vbase_ref[:, 0, :]
+            v_new = jnp.minimum(v_old, cand[...])
+            vo_ref[:, 0, :] = v_new
+            d_new = jnp.minimum(dbase_ref[:, 0, :],
+                                jnp.where(v_new < v_old, v_new, jnp.inf))
+            do_ref[:, 0, :] = d_new
+            pr = jnp.where(jnp.isfinite(d_new), 1.0 / (1.0 + d_new), 0.0)
+            nu_ref[:, 0] = jnp.sum((pr > 0.0).astype(jnp.float32), axis=1)
+            ps_ref[:, 0] = jnp.sum(pr, axis=1)
+
+    return kernel
+
+
+def fused_superstep_call(src, dst, first, last, d, base, tiles, *,
+                         values=None, semiring: str = "plus_times",
+                         tolerance: float = 1e-6,
+                         job_block: int | None = None,
+                         interpret: bool = False):
+    """One fused push + priority update over destination-sorted pairs.
+
+    src/dst/first/last [P] int32 (`BlockPairs` metadata, dst-sorted);
+    d [J, B_N, Vb] consumed pending deltas with NON-selected source rows
+    already masked to the semiring identity (0 / +inf), pre-scaled for
+    plus-times; base [J, B_N, Vb] post-consume deltas; tiles [P, Vb, Vb].
+
+    plus-times  -> (delta_out, node_un, p_sum)            each dst-indexed
+    min-plus    -> (values_out, delta_out, node_un, p_sum)  (`values`
+                   required: [J, B_N, Vb] current values)
+
+    Outputs are only defined for blocks that appear as a destination —
+    callers pass `BlockPairs.dst_touched` state through for the rest.
+    node_un/p_sum [J, B_N] are the un-normalized `<Node_un, P_mean>`
+    reduction of the POST-push state (p_mean = p_sum / max(node_un, 1)).
+    """
+    return _fused_jit(src, dst, first, last, d, base, tiles, values,
+                      semiring=semiring, tolerance=float(tolerance),
+                      job_block=job_block, interpret=bool(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "tolerance",
+                                             "job_block", "interpret"))
+def _fused_jit(src, dst, first, last, d, base, tiles, values, *,
+               semiring, tolerance, job_block, interpret):
+    j, bn, vb = d.shape
+    p = src.shape[0]
+    jb = job_block or j
+    assert j % jb == 0, f"J={j} not divisible by job_block={jb}"
+    grid = (j // jb, p)
+
+    def dmap(jt, pp, src, dst, first, last):
+        return (jt, src[pp], 0)
+
+    def omap(jt, pp, src, dst, first, last):
+        return (jt, dst[pp], 0)
+
+    def tmap(jt, pp, src, dst, first, last):
+        return (pp, 0, 0)
+
+    def pairmap(jt, pp, src, dst, first, last):
+        return (jt, dst[pp])
+
+    state_spec = pl.BlockSpec((jb, 1, vb), omap)
+    pair_spec = pl.BlockSpec((jb, 1), pairmap)
+    tile_spec = pl.BlockSpec((1, vb, vb), tmap)
+    d_spec = pl.BlockSpec((jb, 1, vb), dmap)
+
+    if semiring == "plus_times":
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4, grid=grid,
+            in_specs=[d_spec, state_spec, tile_spec],
+            out_specs=[state_spec, pair_spec, pair_spec])
+        return pl.pallas_call(
+            _make_plus_kernel(tolerance),
+            grid_spec=grid_spec,
+            out_shape=[jax.ShapeDtypeStruct((j, bn, vb), jnp.float32),
+                       jax.ShapeDtypeStruct((j, bn), jnp.float32),
+                       jax.ShapeDtypeStruct((j, bn), jnp.float32)],
+            interpret=interpret,
+        )(src, dst, first, last, d, base, tiles)
+
+    assert values is not None, "min-plus fused call needs `values`"
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4, grid=grid,
+        in_specs=[d_spec, state_spec, state_spec, tile_spec],
+        out_specs=[state_spec, state_spec, pair_spec, pair_spec],
+        scratch_shapes=[pltpu.VMEM((jb, vb), jnp.float32)])
+    return pl.pallas_call(
+        _make_min_kernel(tolerance),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((j, bn, vb), jnp.float32),
+                   jax.ShapeDtypeStruct((j, bn, vb), jnp.float32),
+                   jax.ShapeDtypeStruct((j, bn), jnp.float32),
+                   jax.ShapeDtypeStruct((j, bn), jnp.float32)],
+        interpret=interpret,
+    )(src, dst, first, last, d, values, base, tiles)

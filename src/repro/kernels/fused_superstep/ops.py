@@ -1,0 +1,77 @@
+"""Jit wrappers around the fused superstep megakernel.
+
+`fused_push` mirrors the engine shared-mode push exactly (consume the
+selected blocks' pending deltas, push for every job, fold values), with
+the whole select→stage→push→priority chain lowered into ONE Pallas
+program over the view's destination-sorted `BlockPairs`.  The fold /
+consume bookkeeping stays in jnp (bandwidth-bound on state vectors, not
+adjacency); selection enters the kernel only as identity-masked operand
+rows, so padded selection slots aliasing block 0 cannot re-push it.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.common import resolve_interpret
+from repro.kernels.fused_superstep.kernel import fused_superstep_call
+
+
+def _pick_job_block(j: int, vb: int, semiring: str) -> int:
+    """Largest job chunk whose per-grid-cell footprint fits the budget:
+    tile (Vb^2) + per-job [Jb, Vb] state stripes (plus-times: d/base/out;
+    min-plus: d/values-in+out/deltas-in+out/cand) + 2 pair counters,
+    fp32 — falling back through divisors of J (prime J degrades to 1)."""
+    stripes = 3 if semiring == "plus_times" else 6
+    fixed = vb * vb * 4
+    per_job = (stripes * vb + 2) * 4
+    budget = max(common.VMEM_BUDGET - fixed, per_job)
+    jb = max(1, min(j, budget // per_job))
+    while j % jb:
+        jb -= 1
+    return jb
+
+
+def fused_push(values: jnp.ndarray, deltas: jnp.ndarray, pairs,
+               sel_ids: jnp.ndarray, sel_mask: jnp.ndarray,
+               push_scale: jnp.ndarray, *, semiring: str = "plus_times",
+               tolerance: float = 1e-6, interpret: bool | None = None,
+               with_pairs: bool = False):
+    """Megakernel-backed CAJS push. values/deltas [J, B_N, Vb].
+
+    `pairs` is the view's `graph.structure.BlockPairs`.  Returns updated
+    (values, deltas); with_pairs=True additionally returns the fused
+    priority-pair outputs (node_un, p_sum) [J, B_N] of the POST-push
+    state, zeroed on untouched destination blocks.  ``interpret=None``
+    resolves through `kernels.common.resolve_interpret`."""
+    j, bn, vb = values.shape
+    interpret = resolve_interpret(interpret)
+    jb = _pick_job_block(j, vb, semiring)
+    selb = jnp.zeros((bn,), jnp.bool_).at[sel_ids].max(sel_mask > 0)
+    selb = selb[None, :, None]
+    touched = pairs.dst_touched[None, :, None]
+    if semiring == "plus_times":
+        raw = jnp.where(selb, deltas, 0.0)
+        d = raw * push_scale[:, None, None]
+        base = deltas - raw
+        out, nu, ps = fused_superstep_call(
+            pairs.src, pairs.dst, pairs.first, pairs.last, d, base,
+            pairs.tiles, semiring=semiring, tolerance=tolerance,
+            job_block=jb, interpret=interpret)
+        values = values + raw
+        deltas = jnp.where(touched, out, base)
+    else:
+        pend = jnp.where(selb, deltas, jnp.inf)
+        base = jnp.where(selb, jnp.inf, deltas)
+        vout, dout, nu, ps = fused_superstep_call(
+            pairs.src, pairs.dst, pairs.first, pairs.last, pend, base,
+            pairs.tiles, values=values, semiring=semiring,
+            tolerance=tolerance, job_block=jb, interpret=interpret)
+        values = jnp.where(touched, vout, values)
+        deltas = jnp.where(touched, dout, base)
+    if with_pairs:
+        tz = pairs.dst_touched[None, :]
+        return (values, deltas, jnp.where(tz, nu, 0.0),
+                jnp.where(tz, ps, 0.0))
+    return values, deltas

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _plus_kernel(d_ref, t_ref, o_ref):
     d = d_ref[0]                    # [Jb, Vb]
@@ -42,13 +44,25 @@ def _min_kernel(d_ref, t_ref, o_ref):
     jax.lax.fori_loop(0, jb, body, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("semiring", "job_block",
-                                             "interpret"))
 def mj_spmm_call(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray, *,
                  semiring: str = "plus_times",
                  job_block: int | None = None,
-                 interpret: bool = True) -> jnp.ndarray:
-    """d_sel [q, J, Vb] f32, tiles_sel [q, K, Vb, Vb] f32 -> [q, K, J, Vb]."""
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """d_sel [q, J, Vb] f32, tiles_sel [q, K, Vb, Vb] f32 -> [q, K, J, Vb].
+
+    ``interpret=None`` resolves through `kernels.common.resolve_interpret`
+    (interpreter everywhere except TPU) — backend detection has one source
+    of truth and callers bypassing `ops.mj_spmm` get the same rule."""
+    return _mj_spmm_jit(d_sel, tiles_sel, semiring=semiring,
+                        job_block=job_block,
+                        interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "job_block",
+                                             "interpret"))
+def _mj_spmm_jit(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray, *,
+                 semiring: str, job_block: int | None,
+                 interpret: bool) -> jnp.ndarray:
     q, j, vb = d_sel.shape
     _, k, vb2, vb3 = tiles_sel.shape
     assert vb == vb2 == vb3, (d_sel.shape, tiles_sel.shape)
@@ -61,8 +75,11 @@ def mj_spmm_call(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray, *,
         kernel,
         grid=grid,
         in_specs=[
-            # delta rows: resident per (i, jt); constant across k (inner
-            # revisit) — one HBM fetch per job chunk per selected block
+            # delta rows: jt is the INNERMOST grid dim, so the d-chunk
+            # index (i, jt) changes at (almost) every grid step — d is
+            # re-fetched k times per job chunk (q*k*(j/jb) fetches; only
+            # the j/jb == 1 degenerate grid keeps it resident across k).
+            # Only the adjacency tile below enjoys inner-revisit residency.
             pl.BlockSpec((1, jb, vb), lambda i, kk, jt: (i, jt, 0)),
             # adjacency tile: one HBM fetch per (i, k), shared by all jobs
             pl.BlockSpec((1, 1, vb, vb), lambda i, kk, jt: (i, kk, 0, 0)),

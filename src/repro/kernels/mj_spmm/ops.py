@@ -11,11 +11,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import common
+from repro.kernels.common import default_interpret  # noqa: F401  (re-export)
 from repro.kernels.mj_spmm.kernel import mj_spmm_call
 
 # VMEM budget (bytes) used to pick the job-chunk size on real TPU; in
-# interpret mode it only shapes the grid.
-_VMEM_BUDGET = 12 * 2**20
+# interpret mode it only shapes the grid.  Alias of the shared budget in
+# kernels.common so every kernel sizes against the same ceiling.
+_VMEM_BUDGET = common.VMEM_BUDGET
 
 
 def _pick_job_block(j: int, vb: int) -> int:
@@ -29,18 +32,14 @@ def _pick_job_block(j: int, vb: int) -> int:
     return jb
 
 
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def mj_spmm(d_sel: jnp.ndarray, tiles_sel: jnp.ndarray,
             semiring: str = "plus_times",
             interpret: bool | None = None) -> jnp.ndarray:
     """d_sel [q, J, Vb], tiles_sel [q, K, Vb, Vb] -> contribs [q, K, J, Vb]."""
     q, j, vb = d_sel.shape
     jb = _pick_job_block(j, vb)
-    if interpret is None:
-        interpret = default_interpret()
+    # interpret=None flows through: mj_spmm_call resolves it via
+    # kernels.common (the one source of truth for backend detection)
     return mj_spmm_call(d_sel.astype(jnp.float32),
                         tiles_sel.astype(jnp.float32),
                         semiring=semiring, job_block=jb, interpret=interpret)
@@ -68,7 +67,10 @@ def push_shared(values: jnp.ndarray, deltas: jnp.ndarray,
         deltas = deltas - raw
         dst = nbr_sel.reshape(-1)
         upd = jnp.transpose(contrib, (2, 0, 1, 3)).reshape(j, -1, vb)
-        deltas = deltas.at[:, dst, :].add(upd)
+        # mode="drop" matches core.push.push_plus_one: out-of-range
+        # neighbour sentinels are DROPPED, not left to unspecified OOB
+        # scatter behavior (clamping would credit the last block).
+        deltas = deltas.at[:, dst, :].add(upd, mode="drop")
         return values, deltas
 
     # min-plus
@@ -83,11 +85,11 @@ def push_shared(values: jnp.ndarray, deltas: jnp.ndarray,
         c_k, dst_k = inp                          # [q, J, Vb], [q]
         c_k = jnp.swapaxes(c_k, 0, 1)             # [J, q, Vb]
         old = values[:, dst_k, :]
-        values = values.at[:, dst_k, :].min(c_k)
+        values = values.at[:, dst_k, :].min(c_k, mode="drop")
         new = values[:, dst_k, :]
         improved = new < old
         deltas = deltas.at[:, dst_k, :].min(
-            jnp.where(improved, new, jnp.inf))
+            jnp.where(improved, new, jnp.inf), mode="drop")
         return (values, deltas), None
 
     (values, deltas), _ = jax.lax.scan(

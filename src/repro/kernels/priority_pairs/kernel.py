@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _pairs_kernel(p_ref, n_ref, m_ref):
     p = p_ref[0]                         # [1, Vb] (2D for TPU vector units)
@@ -23,10 +25,18 @@ def _pairs_kernel(p_ref, n_ref, m_ref):
     m_ref[0, 0] = s / jnp.maximum(n, 1.0)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
 def priority_pairs_call(vertex_priority: jnp.ndarray, *,
-                        interpret: bool = True):
-    """[J, B_N, Vb] f32 -> (node_un [J, B_N], p_mean [J, B_N])."""
+                        interpret: bool | None = None):
+    """[J, B_N, Vb] f32 -> (node_un [J, B_N], p_mean [J, B_N]).
+
+    ``interpret=None`` resolves through `kernels.common.resolve_interpret`
+    — same one-source-of-truth rule as mj_spmm_call."""
+    return _pairs_jit(vertex_priority,
+                      interpret=resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pairs_jit(vertex_priority: jnp.ndarray, *, interpret: bool):
     j, bn, vb = vertex_priority.shape
     return pl.pallas_call(
         _pairs_kernel,

@@ -2,20 +2,14 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import default_interpret  # noqa: F401  (re-export)
 from repro.kernels.priority_pairs.kernel import priority_pairs_call
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def priority_pairs(vertex_priority: jnp.ndarray,
                    interpret: bool | None = None):
     """[J, B_N, Vb] -> (node_un, p_mean), both [J, B_N] float32."""
-    if interpret is None:
-        interpret = default_interpret()
     return priority_pairs_call(vertex_priority.astype(jnp.float32),
                                interpret=interpret)

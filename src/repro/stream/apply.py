@@ -151,6 +151,7 @@ def compact_group(sess, grp) -> None:
     grp.pair_slot = None
     grp.ov_used = None
     grp.ov_entry = None
+    grp.pairs = None      # block-pair view follows the rebuilt tiles
     sess.trace.instant("compact", cat="stream", view=str(grp.key))
 
 
@@ -268,6 +269,10 @@ def _apply_structure(sess, grp, pairs, new_w: Dict,
 def _apply_to_group(sess, grp, batch: UpdateBatch, csr_old, csr_new,
                     dirty: np.ndarray, stats: Dict) -> None:
     semiring, fill, normalize, symmetrize = grp.key
+    # any batch may edit tiles (in place or via compaction): drop the
+    # cached block-pair view so the next run rebuilds it from the edited
+    # tiles (the pair tiles are a copy, not an alias)
+    grp.pairs = None
     pairs = _group_touched_pairs(batch, symmetrize)
     deg_o = deg_n = None
     if normalize == "out_degree":
