@@ -91,6 +91,11 @@ class RunMetrics:
     tile_pair_loads: int = 0
     job_block_pushes: int = 0      # (job, block) processing events
     host_syncs: int = 0            # scheduling host<->device round-trips
+    # cross-shard frontier payload of a 2D (jobs x blocks) mesh run
+    # (repro.dist.mesh2d): exchanged delta rows x Vb x itemsize, summed
+    # over supersteps — proportional to frontier deltas, NEVER to whole
+    # tiles; 0.0 off-mesh and on 1D job meshes (nothing block-crosses)
+    halo_bytes: float = 0.0
     iterations_per_job: Optional[np.ndarray] = None
     converged: bool = False
     wall_time_s: float = 0.0       # driver wall time of this run()
@@ -112,6 +117,7 @@ class RunMetrics:
              "tile_pair_loads": int(self.tile_pair_loads),
              "job_block_pushes": int(self.job_block_pushes),
              "host_syncs": int(self.host_syncs),
+             "halo_bytes": float(self.halo_bytes),
              "converged": bool(self.converged),
              "wall_time_s": round(float(self.wall_time_s), 6),
              "updates_applied": int(self.updates_applied),
@@ -239,7 +245,14 @@ def _run_host(policy: SchedulePolicy, sess,
     telemetry never adds a host sync."""
     groups = sess.view_groups()
     offs = np.cumsum([0] + [g.capacity for g in groups])
-    grp_pairs = [sess._pair_data(g) for g in groups]
+    # on a 2D (jobs x blocks) mesh the push consumes the dst-partitioned
+    # PairShards view instead (same global src_nnz, so the tile_pair_loads
+    # accounting below is placement-agnostic)
+    mesh2d = getattr(sess, "_mesh2d", None)
+    if mesh2d is not None:
+        grp_pairs = [sess._pair_shards(g) for g in groups]
+    else:
+        grp_pairs = [sess._pair_data(g) for g in groups]
     # host mirror of the per-source-block real-pair counts (explicit
     # device_get: the driver may run under the transfer sentinel)
     nnz_host = [np.asarray(x) for x in
@@ -371,11 +384,18 @@ def _run_host(policy: SchedulePolicy, sess,
                     on_np = np.asarray(selection.msk[gi]) > 0
                     m.tile_pair_loads += int(
                         (nnz_host[gi][sel_np] * on_np).sum())
-                    g.values, g.deltas = sess._push_indep_fn(g)(
-                        g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
-                        jnp.asarray(selection.sel[gi]),
-                        jnp.asarray(selection.msk[gi]), g.push_scale,
-                        g.overlay)
+                    args = (g.values, g.deltas, g.graph.tiles,
+                            g.graph.nbr_ids,
+                            jnp.asarray(selection.sel[gi]),
+                            jnp.asarray(selection.msk[gi]), g.push_scale,
+                            g.overlay)
+                    if mesh2d is not None:   # 2D push needs the pair view
+                        args = args + (grp_pairs[gi],)
+                    g.values, g.deltas = sess._push_indep_fn(g)(*args)
+        if mesh2d is not None:
+            from repro.dist.mesh2d import host_halo_bytes
+            m.halo_bytes += host_halo_bytes(mesh2d, groups, selection,
+                                            actives)
         m.supersteps += 1
         # dtype contract: host selections carry python ints (coerced once)
         m.tile_loads += int(selection.tile_loads)
@@ -553,6 +573,9 @@ def _run_device(policy: SchedulePolicy, sess,
     the historical restart).  Within a run the trajectory is invariant to
     steps_per_sync (superstep t draws the same key regardless of
     chunking), so tile_loads/supersteps are identical across cadences."""
+    if getattr(sess, "_mesh2d", None) is not None:
+        from repro.dist.mesh2d import run_device_2d
+        return run_device_2d(policy, sess, max_supersteps)
     groups = sess.view_groups()
     step_fn = sess._device_step_fn(policy)
     boost = sess._consume_dirty_boost()

@@ -107,6 +107,11 @@ class ViewGroup:
     # — built lazily by session._pair_data, dropped to None whenever the
     # tiles change (stream structural edits, compaction)
     pairs: Optional[object] = None
+    # dst-partitioned PairShards of `pairs` for a 2D (jobs x blocks) mesh
+    # (repro.dist.mesh2d), cached as (source BlockPairs, mesh signature,
+    # placed shards) — the strong reference makes the identity check safe
+    # and a rebuild of `pairs` (compaction) auto-invalidates the partition
+    pair_shards: Optional[tuple] = None
 
     @property
     def capacity(self) -> int:
@@ -166,6 +171,10 @@ class GraphSession:
         self.scheduler: Optional[TwoLevelScheduler] = None
         self.q = 0
         self._jit_cache = {}
+        # 2D (jobs x blocks) mesh placement (repro.dist.mesh2d.Mesh2DSpec)
+        # or None; set by shard_session_2d, cleared by unshard_session —
+        # reroutes the device superstep and the push functions while set
+        self._mesh2d = None
 
     # alpha/samples/seed live canonically on the scheduler once it exists
     # (every policy must see one consistent value); before the first submit
@@ -505,6 +514,20 @@ class GraphSession:
                tuple(g.overlay.capacity for g in groups),
                self.q, float(self.alpha), int(self.samples),
                self.use_pallas, tel_cap)
+        if self._mesh2d is not None:
+            # the 2D superstep closes over the mesh layout AND the pair
+            # partition's shapes (the shard_map in_specs pytrees), so both
+            # join the key; leaving the mesh falls back to the 1D entry —
+            # one entry per (policy, shape, placement), never growth per
+            # run() (pinned by tests/test_dist_mesh2d.py retrace test)
+            from repro.dist.mesh2d import build_device_step_2d
+            key = key + (self._mesh2d.signature(),
+                         tuple(self._pair_shards(g).tree_flatten()[1]
+                               for g in groups))
+            if key not in self._jit_cache:
+                self._jit_cache[key] = build_device_step_2d(
+                    policy, self, self._mesh2d)
+            return self._jit_cache[key]
         if key not in self._jit_cache:
             self._jit_cache[key] = build_device_step(policy, self)
         return self._jit_cache[key]
@@ -552,6 +575,14 @@ class GraphSession:
 
     def _push_shared_fn(self, grp: ViewGroup):
         """All jobs of the view process the same selected blocks (CAJS)."""
+        if self._mesh2d is not None:
+            key = ("push_shared2d", grp.key, self.use_pallas,
+                   self._mesh2d.signature())
+            if key not in self._jit_cache:
+                from repro.dist.mesh2d import shared_push_fn_2d
+                self._jit_cache[key] = shared_push_fn_2d(
+                    self._mesh2d, grp, self.use_pallas)
+            return self._jit_cache[key]
         key = ("push_shared", grp.key, self.use_pallas)
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(shared_push_fn(
@@ -560,10 +591,38 @@ class GraphSession:
 
     def _push_indep_fn(self, grp: ViewGroup):
         """Each job processes its own selection (redundancy baseline)."""
+        if self._mesh2d is not None:
+            key = ("push_indep2d", grp.key, self._mesh2d.signature())
+            if key not in self._jit_cache:
+                from repro.dist.mesh2d import indep_push_fn_2d
+                self._jit_cache[key] = indep_push_fn_2d(self._mesh2d, grp)
+            return self._jit_cache[key]
         key = ("push_indep", grp.key)
         if key not in self._jit_cache:
             self._jit_cache[key] = jax.jit(indep_push_fn(grp.push_one))
         return self._jit_cache[key]
+
+    def _pair_shards(self, grp: ViewGroup):
+        """The view's dst-partitioned `PairShards` on the current 2D mesh
+        (repro.dist.mesh2d), cached on the group against the identity of
+        the source BlockPairs and the mesh signature — compaction rebuilds
+        `grp.pairs`, so the partition follows automatically; blocks-
+        replicated groups get the trivial 1-shard partition."""
+        from repro.dist.mesh2d import (partition_block_pairs,
+                                       place_pair_shards)
+        spec = self._mesh2d
+        bp = self._pair_data(grp)
+        lay = spec.layout(grp)
+        n = spec.block_shards if lay.blocks_sharded else 1
+        cached = grp.pair_shards
+        if (cached is not None and cached[0] is bp
+                and cached[1] == spec.signature()):
+            return cached[2]
+        fill = float(grp.alg.graph_fill)
+        ps = place_pair_shards(spec, partition_block_pairs(bp, n, fill),
+                               lay.blocks_sharded)
+        grp.pair_shards = (bp, spec.signature(), ps)
+        return ps
 
     # -- placement -----------------------------------------------------------
 
@@ -575,6 +634,9 @@ class GraphSession:
         is identical."""
         if mesh is None:
             return
+        # a mesh with >= 2 named axes selects the 2D (jobs x blocks)
+        # placement; shard_session also clears a previous 2D placement
+        # when re-placing on a 1D mesh
         from repro.dist.graph import shard_session
         shard_session(mesh, self)
 

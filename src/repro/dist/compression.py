@@ -26,6 +26,29 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 
+def quantize_ef(t: jax.Array, bits: int = 8, axis=None):
+    """Quantize `t` to a signed (2^bits - 1)-level grid, returning
+    (dequantized, residual) with t == dequantized + residual exactly.
+
+    `axis` selects the scale granularity: None shares one absmax scale
+    across the whole tensor; an int/tuple computes the scale per slice
+    along the REMAINING axes (e.g. axis=-1 gives every leading-index row
+    its own scale — what the 2D-mesh frontier exchange uses per
+    (job, slot) delta row, so one hot row cannot flatten the grid of a
+    near-converged one).  Zero rows quantize to exact zeros (the 1e-30
+    floor only guards the division), so sparse frontiers stay sparse.
+    Feeding the residual back into the next quantization makes the bias
+    telescope away — see `make_compressed_grad_fn`, whose local math this
+    reuses without the collectives."""
+    t = t.astype(jnp.float32)
+    levels = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(t), axis=axis, keepdims=axis is not None)
+    scale = jnp.maximum(amax, 1e-30) / levels
+    q = jnp.clip(jnp.round(t / scale), -levels, levels)
+    deq = q * scale
+    return deq, t - deq
+
+
 def make_compressed_grad_fn(mesh: Mesh, loss_fn: Callable[..., jax.Array], *,
                             axis_name: str = None, bits: int = 8):
     """Returns fn(params, err, batch) -> (loss, grads, new_err).

@@ -92,6 +92,49 @@ class RestartManager:
         return state, step, restarts
 
 
+def checkpoint_session(sess) -> dict:
+    """Host snapshot of a GraphSession's resumable state: every view's
+    values/deltas (the convergence state — adjacency is rebuilt from the
+    session's own graph, never checkpointed) plus the scheduler's stream
+    position, so a resumed run draws the SAME sampling keys it would have
+    drawn uninterrupted.  Mesh-agnostic by construction: device_get
+    gathers sharded state to host, so the snapshot restores onto any
+    placement — including a SMALLER mesh after a shard loss."""
+    groups = sess.view_groups()
+    vals, dels = jax.device_get(([g.values for g in groups],
+                                 [g.deltas for g in groups]))
+    return {"keys": [g.key for g in groups],
+            "values": [jnp.asarray(v) for v in vals],
+            "deltas": [jnp.asarray(d) for d in dels],
+            "step": int(sess.scheduler._step)}
+
+
+def restore_session(sess, snapshot: dict, mesh=None, **shard_kwargs):
+    """Elastic reshard after a (simulated) shard loss: load `snapshot`
+    into `sess` and re-place on the survivor `mesh` (2D (jobs x blocks)
+    when it has two named axes — see repro.dist.graph.shard_session — or
+    single-device when None).  The resumed run picks up the scheduler
+    stream where the snapshot left it, so a min-plus run restored onto a
+    different block-shard count reaches the bit-identical fixpoint."""
+    from repro.dist.mesh2d import unshard_session
+    unshard_session(sess)
+    by_key = {g.key: g for g in sess.view_groups()}
+    if set(snapshot["keys"]) != set(by_key):
+        raise ValueError(
+            f"snapshot views {snapshot['keys']} do not match the "
+            f"session's {list(by_key)}")
+    for key, v, d in zip(snapshot["keys"], snapshot["values"],
+                         snapshot["deltas"]):
+        grp = by_key[key]
+        grp.values = jnp.asarray(v)
+        grp.deltas = jnp.asarray(d)
+    sess.scheduler._step = int(snapshot["step"])
+    if mesh is not None:
+        from repro.dist.graph import shard_session
+        shard_session(mesh, sess, **shard_kwargs)
+    return sess
+
+
 @dataclasses.dataclass
 class StragglerReport:
     step: int

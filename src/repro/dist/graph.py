@@ -62,7 +62,7 @@ def _replicated(mesh: Mesh, x) -> jax.Array:
 
 
 def shard_job_state(mesh: Mesh, values, deltas, push_scale, graph,
-                    axis_name: Optional[str] = None):
+                    axis_name: Optional[str] = None, view_key=None):
     """Place stacked job state on `mesh`: values/deltas/push_scale sharded
     over the job axis, the shared graph replicated (mutated in place — it is
     the shared view by design).  Used by GraphSession and shard_run alike;
@@ -75,6 +75,10 @@ def shard_job_state(mesh: Mesh, values, deltas, push_scale, graph,
         jobs3 = job_sharding(mesh, axis, ndim=3)
         jobs1 = job_sharding(mesh, axis, ndim=1)
     else:  # remainder jobs: replicate rather than pad (identical math)
+        if n_shard > 1:
+            from repro.dist.mesh2d import warn_layout_once
+            warn_layout_once(view_key if view_key is not None else ("run",),
+                             axis, n_shard, j, "jobs-replicated")
         jobs3 = NamedSharding(mesh, P(None, None, None))
         jobs1 = NamedSharding(mesh, P(None))
     graph.tiles = _replicated(mesh, graph.tiles)
@@ -86,7 +90,8 @@ def shard_job_state(mesh: Mesh, values, deltas, push_scale, graph,
             jax.device_put(push_scale, jobs1))
 
 
-def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
+def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None,
+                  axes=None, *, compress_halo: bool = False, bits: int = 8):
     """Place a (possibly heterogeneous) GraphSession on `mesh`: EVERY view
     group's job axis is sharded independently (each view keeps its own
     padded [J_view_cap, B_N, Vb] state) and every view's tiles are
@@ -95,16 +100,29 @@ def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
     the mesh fall back to replication (identical math), per group — a
     divisible plus-times group shards even when the min-plus group cannot.
 
+    `axes=("jobs", "blocks")` (or any mesh with >= 2 named axes) selects
+    the 2D placement instead: job state shards over BOTH axes and each
+    block shard owns its `BlockPairs` slice + the destination rows it
+    updates, exchanging only frontier deltas per superstep — see
+    repro.dist.mesh2d (`compress_halo`/`bits` apply only there).
+
     The delta-COO overlay of an evolving view (repro.stream) is SHARED
     graph data exactly like the tiles, so it replicates with them: each
     device stages a block's overlay row alongside its tile for its local
     jobs.  Job state stays sharded across update batches — apply_updates
     touches values/deltas with .at scatters, which preserve placement."""
     import dataclasses as _dc
+    if axes is not None or len(mesh.axis_names) >= 2:
+        from repro.dist.mesh2d import shard_session_2d
+        ax = tuple(axes) if axes is not None else tuple(mesh.axis_names[:2])
+        return shard_session_2d(mesh, session, axes=ax,
+                                compress_halo=compress_halo, bits=bits)
+    from repro.dist.mesh2d import unshard_session as _unshard2d
+    _unshard2d(session)   # leaving a 2D mesh for a 1D one
     for grp in session.view_groups():
         grp.values, grp.deltas, grp.push_scale = shard_job_state(
             mesh, grp.values, grp.deltas, grp.push_scale, grp.graph,
-            axis_name)
+            axis_name, view_key=grp.key)
         if grp.overlay is not None:
             grp.overlay = _dc.replace(
                 grp.overlay,
@@ -134,6 +152,13 @@ def shard_session(mesh: Mesh, session, axis_name: Optional[str] = None):
             tiles=_replicated(mesh, bp.tiles),
             dense_op=None)
     return session
+
+
+def unshard_session(session):
+    """Gather a 2D-placed session back to single-device placement (no-op
+    for 1D job-axis placements, which never commit state off-mesh)."""
+    from repro.dist.mesh2d import unshard_session as _unshard2d
+    return _unshard2d(session)
 
 
 def shard_run(run, mesh: Mesh, axis_name: Optional[str] = None):

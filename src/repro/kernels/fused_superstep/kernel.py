@@ -129,6 +129,10 @@ def fused_superstep_call(src, dst, first, last, d, base, tiles, *,
 
     Outputs are only defined for blocks that appear as a destination —
     callers pass `BlockPairs.dst_touched` state through for the rest.
+    Output width follows `base`: a 2D-mesh block shard (repro.dist.mesh2d)
+    passes d at the GLOBAL source width [J, B_N, Vb] with base/values (and
+    dst entries) at its LOCAL dst width [J, B_loc, Vb]; unsharded callers
+    pass both at B_N and nothing changes.
     node_un/p_sum [J, B_N] are the un-normalized `<Node_un, P_mean>`
     reduction of the POST-push state (p_mean = p_sum / max(node_un, 1)).
     """
@@ -141,7 +145,12 @@ def fused_superstep_call(src, dst, first, last, d, base, tiles, *,
                                              "job_block", "interpret"))
 def _fused_jit(src, dst, first, last, d, base, tiles, values, *,
                semiring, tolerance, job_block, interpret):
-    j, bn, vb = d.shape
+    # output width follows BASE, not d: a 2D-mesh shard passes the full
+    # global-source-indexed operand d [J, B_N, Vb] (what src[pp] indexes)
+    # with base/values/outputs at its LOCAL dst width [J, B_loc, Vb]
+    # (what dst[pp] indexes) — identical shapes in the unsharded call
+    j, _, vb = d.shape
+    bn = base.shape[1]
     p = src.shape[0]
     jb = job_block or j
     assert j % jb == 0, f"J={j} not divisible by job_block={jb}"

@@ -1,0 +1,421 @@
+"""2D (jobs x blocks) mesh: block-sharded graph state (repro.dist.mesh2d),
+run in subprocesses with 4 host devices.
+
+The tentpole contract: partitioning the BlockPairs tile stream across a
+`blocks` mesh axis — each shard owning its destination rows of every job's
+state and exchanging only compressed frontier deltas — must change WHERE
+the arithmetic runs, never what it computes.  Min-plus fixpoints are
+bit-identical to the single-device engine (idempotent semiring, same
+superstep count); plus-times matches to tolerance.  On top of that:
+
+1. a graph whose full tile set exceeds a simulated single-device memory
+   cap runs to the correct fixpoint once 4-way block-sharded, with
+   cross-shard traffic (RunMetrics.halo_bytes) bounded by the staged
+   frontier, not the tile bytes;
+2. the full policy grid (TwoLevel / Independent / AllBlocks / Fused, host
+   and device drivers) agrees on a (2 x 2) jobs-x-blocks mesh;
+3. streaming: overlay updates + compact() on a 2D mesh equal a fresh
+   session on the mutated graph (same invariant test_stream_properties
+   pins single-device);
+4. shard loss: checkpoint_session -> restore_session onto a SMALLER mesh
+   resumes the scheduler stream and still reaches the bitwise min-plus
+   fixpoint in the same total superstep count (elastic reshard);
+5. non-divisible extents fall back to replication with a one-time
+   MeshLayoutWarning naming the chosen layout;
+6. entering / leaving / re-entering a mesh re-uses the per-key jit cache
+   entries (retrace_sentinel: one entry per (policy, mesh-signature) key,
+   pinned — the cache-key promise in GraphSession._device_step_fn).
+
+quantize_ef (dist.compression) is also unit-tested here in-process on
+frontier-delta-shaped inputs: signed values, zero runs, per-row scales,
+and the error-feedback telescope the halo exchange relies on.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+CORE_SCRIPT = r"""
+import os, warnings
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import PageRank, SSSP
+from repro.analysis.sentinels import retrace_sentinel
+from repro.core import Fused, GraphSession, TwoLevel
+from repro.dist.graph import shard_session, unshard_session
+from repro.dist.mesh2d import (MeshLayoutWarning, make_mesh2d,
+                               reset_layout_warnings)
+from repro.graph import rmat_graph
+
+assert len(jax.devices()) == 4
+csr = rmat_graph(128, 4, seed=7)
+BLOCK = 16
+
+
+def build(**kw):
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=0, **kw)
+    hs = [sess.submit(PageRank()), sess.submit(PageRank(damping=0.7)),
+          sess.submit(SSSP(source=3)), sess.submit(SSSP(source=17))]
+    return sess, hs
+
+
+# single-device reference fixpoint
+ref, href = build()
+mref = ref.run(TwoLevel(), 20000)
+assert mref.converged
+res = [ref.result(h) for h in href]
+
+# --- 1. past a simulated single-device memory cap, 4-way block shards ----
+mesh = make_mesh2d(1, 4)
+s1, h1 = build()
+m1 = s1.run(Fused(), 20000, mesh=mesh)
+assert m1.converged
+groups = s1.view_groups()
+total_tile_bytes = sum(
+    int(np.prod(s1._pair_data(g).tiles.shape)) * 4 for g in groups)
+per_shard_tile_bytes = sum(
+    int(np.prod(s1._pair_shards(g).tiles.shape[1:])) * 4 for g in groups)
+CAP = total_tile_bytes // 2          # simulated device memory budget
+assert per_shard_tile_bytes <= CAP < total_tile_bytes, (
+    per_shard_tile_bytes, CAP, total_tile_bytes)
+r1 = [s1.result(h) for h in h1]
+np.testing.assert_array_equal(r1[2], res[2])       # min-plus: bitwise
+np.testing.assert_array_equal(r1[3], res[3])
+np.testing.assert_allclose(r1[0], res[0], rtol=1e-3, atol=1e-4)
+np.testing.assert_allclose(r1[1], res[1], rtol=1e-3, atol=1e-4)
+print("CAP-OK")
+
+# --- halo traffic scales with the staged frontier, not the tile set -----
+assert m1.halo_bytes > 0
+bn = s1.view_groups()[0].graph.num_blocks
+frontier_bound = m1.supersteps * (
+    sum(g.capacity * s1.q * BLOCK * 4 for g in groups) + 8 * bn)
+assert m1.halo_bytes <= frontier_bound, (m1.halo_bytes, frontier_bound)
+# shipping whole tiles every superstep would cost this much:
+assert m1.halo_bytes < total_tile_bytes * m1.supersteps
+print("HALO-OK")
+
+# --- 5. non-divisible extents: replicated fallback, one-time warning ----
+csr6 = rmat_graph(96, 3, seed=5)        # B_N = 6, not divisible by 4
+
+def build6():
+    s = GraphSession(csr6, BLOCK, capacity=2, seed=0)
+    h = s.submit(SSSP(source=1))
+    return s, h
+
+ref6, rh6 = build6()
+ref6.run(TwoLevel(), 20000)
+reset_layout_warnings()
+s6, h6 = build6()
+with warnings.catch_warnings(record=True) as w:
+    warnings.simplefilter("always")
+    m6 = s6.run(TwoLevel(), 20000, mesh=mesh)
+lw = [x for x in w if issubclass(x.category, MeshLayoutWarning)]
+assert len(lw) == 1, [str(x.message) for x in lw]
+assert "blocks-replicated" in str(lw[0].message), str(lw[0].message)
+assert m6.converged
+np.testing.assert_array_equal(s6.result(h6), ref6.result(rh6))
+# same fallback layout again -> already warned, stays silent
+s6b, h6b = build6()
+with warnings.catch_warnings(record=True) as w2:
+    warnings.simplefilter("always")
+    s6b.run(TwoLevel(), 20000, mesh=mesh)
+assert not [x for x in w2 if issubclass(x.category, MeshLayoutWarning)], \
+    [str(x.message) for x in w2]
+# ... until the registry is reset
+reset_layout_warnings()
+s6c, _ = build6()
+with warnings.catch_warnings(record=True) as w3:
+    warnings.simplefilter("always")
+    s6c.run(TwoLevel(), 20000, mesh=mesh)
+assert [x for x in w3 if issubclass(x.category, MeshLayoutWarning)]
+# jobs-axis fallback too: capacity 2 does not divide 4 jobs shards
+reset_layout_warnings()
+s7, h7 = build6()
+with warnings.catch_warnings(record=True) as w4:
+    warnings.simplefilter("always")
+    m7 = s7.run(TwoLevel(), 20000, mesh=make_mesh2d(4, 1))
+msgs = [str(x.message) for x in w4
+        if issubclass(x.category, MeshLayoutWarning)]
+assert any("jobs-replicated" in m for m in msgs), msgs
+assert m7.converged
+np.testing.assert_array_equal(s7.result(h7), ref6.result(rh6))
+print("WARN-OK")
+
+# --- 6. mesh re-specialization keeps one jit entry per key --------------
+s8, h8 = build()
+pol = Fused()
+s8.run(pol, 20000)                       # pins the single-device entry
+with retrace_sentinel(s8, allow_new=("superstep",)):
+    s8.run(pol, 20000, mesh=mesh)        # first 2D compile: one new key
+with retrace_sentinel(s8):               # NO growth allowed from here on
+    unshard_session(s8)
+    s8.run(pol, 20000)                   # back on the 1D entry
+    shard_session(mesh, s8, axes=("jobs", "blocks"))
+    s8.run(pol, 20000)                   # back on the 2D entry
+steps = [k for k in s8._jit_cache if k[0] == "superstep"]
+assert len(steps) == 2, steps
+r8 = [s8.result(h) for h in h8]
+np.testing.assert_array_equal(r8[2], res[2])
+print("RETRACE-OK")
+"""
+
+
+GRID_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import PageRank, SSSP
+from repro.core import AllBlocks, Fused, GraphSession, Independent, TwoLevel
+from repro.dist.mesh2d import make_mesh2d
+from repro.graph import rmat_graph
+
+csr = rmat_graph(128, 4, seed=7)
+BLOCK = 16
+mesh = make_mesh2d(2, 2)
+
+
+def build():
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=0)
+    hs = [sess.submit(PageRank()), sess.submit(PageRank(damping=0.7)),
+          sess.submit(SSSP(source=3)), sess.submit(SSSP(source=17))]
+    return sess, hs
+
+
+ref, href = build()
+assert ref.run(TwoLevel(), 20000).converged
+res = [ref.result(h) for h in href]
+
+GRID = [
+    ("host/two_level", TwoLevel()),
+    ("host/independent", Independent()),
+    ("host/all_blocks", AllBlocks()),
+    ("device/two_level", TwoLevel(backend="device", steps_per_sync=2)),
+    ("device/independent", Independent(backend="device", steps_per_sync=1)),
+    ("device/all_blocks", AllBlocks(backend="device", steps_per_sync=2)),
+    ("device/fused", Fused()),
+]
+for name, pol in GRID:
+    s, hs = build()
+    m = s.run(pol, 20000, mesh=mesh)
+    assert m.converged, (name, m)
+    r = [s.result(h) for h in hs]
+    np.testing.assert_array_equal(r[2], res[2], err_msg=name)
+    np.testing.assert_array_equal(r[3], res[3], err_msg=name)
+    np.testing.assert_allclose(r[0], res[0], rtol=1e-3, atol=1e-4,
+                               err_msg=name)
+    np.testing.assert_allclose(r[1], res[1], rtol=1e-3, atol=1e-4,
+                               err_msg=name)
+    print(name, "ok", m.supersteps)
+
+# compressed halo: min-plus stays bitwise (never quantized), plus-times
+# within EF tolerance, payload strictly smaller than the f32 halo
+from repro.dist.graph import shard_session
+sc, hc = build()
+shard_session(mesh, sc, axes=("jobs", "blocks"), compress_halo=True)
+mc = sc.run(Fused(), 20000)
+assert mc.converged
+rc = [sc.result(h) for h in hc]
+np.testing.assert_array_equal(rc[2], res[2])
+np.testing.assert_array_equal(rc[3], res[3])
+np.testing.assert_allclose(rc[0], res[0], rtol=5e-3, atol=5e-4)
+su, hu = build()
+mu = su.run(Fused(), 20000, mesh=mesh)
+assert 0 < mc.halo_bytes < mu.halo_bytes, (mc.halo_bytes, mu.halo_bytes)
+print("GRID-OK")
+"""
+
+
+STREAM_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import Katz, PageRank, SSSP
+from repro.core import Fused, GraphSession, TwoLevel
+from repro.dist.mesh2d import make_mesh2d
+from repro.graph import mutation_stream, rmat_graph
+from repro.stream import apply_to_csr
+
+csr = rmat_graph(96, 3, seed=3)
+BLOCK = 16
+mesh = make_mesh2d(2, 2)
+batches = mutation_stream(csr, 2, inserts_per_batch=4, deletes_per_batch=2,
+                          seed=9, weighted=False, w_max=4.0)
+
+for policy, tag in [(TwoLevel(), "host"), (Fused(), "device")]:
+    sess = GraphSession(csr, BLOCK, capacity=2, seed=11, overlay_capacity=2)
+    algs = [PageRank(), SSSP(source=5), Katz(alpha=0.02)]
+    hs = [sess.submit(a) for a in algs]
+    sess.run(policy, max_supersteps=6, mesh=mesh)
+    csr_k = csr
+    for b in batches:
+        sess.apply_updates(b)
+        sess.run(policy, max_supersteps=4)
+        csr_k = apply_to_csr(csr_k, b)
+    sess.compact()
+    assert sess.run(policy, 50000).converged
+
+    fresh = GraphSession(csr_k, BLOCK, capacity=2, seed=11)
+    fh = [fresh.submit(a) for a in algs]
+    assert fresh.run(TwoLevel(), 50000).converged
+    for g_s, g_f in zip(sess.view_groups(), fresh.view_groups()):
+        assert g_s.overlay.capacity == 0        # compact() folded it in
+        np.testing.assert_array_equal(np.asarray(g_s.graph.tiles),
+                                      np.asarray(g_f.graph.tiles))
+    for a, h, f in zip(algs, hs, fh):
+        if a.semiring == "min_plus":
+            np.testing.assert_array_equal(sess.result(h), fresh.result(f))
+        else:
+            np.testing.assert_allclose(sess.result(h), fresh.result(f),
+                                       rtol=1e-3, atol=1e-4)
+    print("STREAM-" + tag.upper() + "-OK")
+"""
+
+
+FAULT_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax
+from repro.algorithms import PageRank, SSSP
+from repro.core import GraphSession, TwoLevel
+from repro.dist.fault import checkpoint_session, restore_session
+from repro.dist.mesh2d import make_mesh2d
+from repro.graph import rmat_graph
+
+csr = rmat_graph(128, 4, seed=13)
+BLOCK = 16
+
+
+def build():
+    s = GraphSession(csr, BLOCK, capacity=2, seed=2)
+    hs = [s.submit(SSSP(source=3)), s.submit(SSSP(source=40)),
+          s.submit(PageRank())]
+    return s, hs
+
+
+ref, href = build()
+mref = ref.run(TwoLevel(), 20000)
+assert mref.converged
+res = [ref.result(h) for h in href]
+
+# run 5 supersteps on a 4-shard mesh, checkpoint, then "lose" two shards
+s, hs = build()
+m_pre = s.run(TwoLevel(), 5, mesh=make_mesh2d(1, 4))
+assert not m_pre.converged and m_pre.supersteps == 5
+snap = checkpoint_session(s)
+
+# survivor topology: a fresh session (same submissions + seed) on 1x2
+s2, hs2 = build()
+restore_session(s2, snap, mesh=make_mesh2d(1, 2))
+m_post = s2.run(TwoLevel(), 20000)
+assert m_post.converged
+# the resumed scheduler stream continues where the snapshot stopped:
+# identical remaining supersteps, bitwise min-plus fixpoint
+assert m_pre.supersteps + m_post.supersteps == mref.supersteps, (
+    m_pre.supersteps, m_post.supersteps, mref.supersteps)
+np.testing.assert_array_equal(s2.result(hs2[0]), res[0])
+np.testing.assert_array_equal(s2.result(hs2[1]), res[1])
+np.testing.assert_allclose(s2.result(hs2[2]), res[2], rtol=1e-3,
+                           atol=1e-4)
+print("FAULT-OK")
+"""
+
+
+def _run(script, markers):
+    src = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    pythonpath = src + os.pathsep + os.environ.get("PYTHONPATH", "")
+    result = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=480,
+        env={**os.environ, "PYTHONPATH": pythonpath.rstrip(os.pathsep)})
+    for marker in markers:
+        assert marker in result.stdout, result.stderr[-2000:]
+
+
+def test_block_sharded_fixpoint_past_memory_cap():
+    _run(CORE_SCRIPT, ("CAP-OK", "HALO-OK", "WARN-OK", "RETRACE-OK"))
+
+
+def test_elastic_reshard_resumes_bitwise():
+    _run(FAULT_SCRIPT, ("FAULT-OK",))
+
+
+@pytest.mark.slow
+def test_mesh2d_policy_grid_and_compressed_halo():
+    _run(GRID_SCRIPT, ("GRID-OK",))
+
+
+@pytest.mark.slow
+def test_mesh2d_streaming_compact_matches_fresh():
+    _run(STREAM_SCRIPT, ("STREAM-HOST-OK", "STREAM-DEVICE-OK"))
+
+
+# ---------------------------------------------------------------------------
+# quantize_ef: the int8 error-feedback primitive under the halo exchange
+# ---------------------------------------------------------------------------
+
+
+def _frontier_deltas(seed=0, j=3, b=4, vb=16, density=0.25):
+    """Signed, mostly-zero [J, B, Vb] rows — the shape and sparsity of a
+    staged frontier-delta payload."""
+    rng = np.random.default_rng(seed)
+    t = rng.normal(scale=0.1, size=(j, b, vb)).astype(np.float32)
+    t *= rng.random((j, b, vb)) < density
+    t[:, 1, :] = 0.0                       # a whole zero run (unselected)
+    return t
+
+
+def test_quantize_ef_roundtrip_and_zero_rows():
+    from repro.dist.compression import quantize_ef
+    t = _frontier_deltas(seed=1)
+    deq, err = map(np.asarray, quantize_ef(t, bits=8, axis=-1))
+    # dequantized + residual reconstructs the input (EF invariant)
+    np.testing.assert_allclose(deq + err, t, rtol=0, atol=1e-6)
+    # zero rows stay EXACTLY zero — no quantization noise invents work
+    assert not deq[:, 1, :].any() and not err[:, 1, :].any()
+    zero_rows = ~t.any(axis=-1)
+    assert not deq[zero_rows].any() and not err[zero_rows].any()
+    # signs survive
+    nz = t != 0
+    assert (np.sign(deq[nz & (deq != 0)])
+            == np.sign(t[nz & (deq != 0)])).all()
+    # per-row error bound: |err| <= scale/2 ~ amax / (2 * 127)
+    amax = np.abs(t).max(axis=-1, keepdims=True)
+    assert (np.abs(err) <= amax / 127 + 1e-12).all()
+
+
+def test_quantize_ef_per_row_scales_are_independent():
+    from repro.dist.compression import quantize_ef
+    t = np.zeros((2, 2, 16), np.float32)
+    t[0, 0, :4] = [1e3, -2e3, 5e2, 1.5e3]          # loud row
+    t[1, 1, :4] = [1e-3, -2e-3, 5e-4, 1.5e-3]      # quiet row
+    deq, err = map(np.asarray, quantize_ef(t, bits=8, axis=-1))
+    # the loud row's amax must not widen the quiet row's grid
+    assert np.abs(err[1, 1]).max() <= 2e-3 / 127 + 1e-12
+    assert np.abs(err[0, 0]).max() <= 2e3 / 127 + 1e-9
+
+
+def test_quantize_ef_error_feedback_telescopes():
+    """Carried residuals drain: over a stream of deltas, the sum of what
+    was SENT (dequantized) differs from the sum of what was PRODUCED by
+    exactly the final residual — quantization error never accumulates."""
+    from repro.dist.compression import quantize_ef
+    err = np.zeros((3, 4, 16), np.float32)
+    sent = np.zeros_like(err)
+    produced = np.zeros_like(err)
+    for k in range(12):
+        t = _frontier_deltas(seed=100 + k)
+        deq, err = map(np.asarray, quantize_ef(t + err, bits=8, axis=-1))
+        sent += deq
+        produced += t
+    np.testing.assert_allclose(produced - sent, err, rtol=0, atol=1e-4)
+    # and the residual itself is one quantization step, not 12
+    assert np.abs(err).max() < 0.05
