@@ -71,6 +71,18 @@
                              full per-superstep series at < 10% overhead,
                              and exports a schema-validated Chrome/Perfetto
                              trace alongside the JSON records.
+  fig_serve                : serve-front SLO curves (repro.obs.loadgen) —
+                             >= 1k deterministic open-loop arrivals
+                             (seeded Poisson + diurnal bursts, hundreds of
+                             tenants, mixed algorithm families, interleaved
+                             update batches) drive a long-lived
+                             GraphSession + ConcurrentServeScheduler pair;
+                             sweeps the inter-job parallelism knob and
+                             reports per-family p50/p99 job latency and
+                             throughput-vs-parallelism (Hauck et al.'s
+                             trade-off), exporting a schema-validated
+                             metrics-registry snapshot.  FIG_SERVE_SMOKE=1
+                             shrinks the sweep (CI fast job).
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modes are selectable:
 ``python benchmarks/run.py [mode ...]`` (default: all).  ``--json [DIR]``
@@ -792,6 +804,96 @@ def fig_trace():
             **_counters(m_on))
 
 
+def fig_serve():
+    """Serve-front SLO observability (ROADMAP item 3): open-loop arrivals
+    through the two-level admission scheduler into a long-lived
+    GraphSession, swept over the inter-job parallelism knob.
+
+    Open loop means the arrival schedule is FIXED before the run: a slow
+    configuration builds queue (and p99 latency) instead of throttling
+    its own offered load, so the throughput-vs-parallelism curve exposes
+    the real intra- vs inter-query trade-off (Hauck et al., PAPERS.md).
+    Everything is seeded and latencies are counted in scheduler ticks, so
+    the records — and the regression gate anchored on them — reproduce
+    bit-for-bit.  The last sweep point's ServeMetrics + SLOTracker +
+    harness summary are snapshotted through a MetricsRegistry
+    (schema-validated) to REGISTRY_fig_serve.json next to the records."""
+    from repro.core import GraphSession
+    from repro.obs import (LoadgenConfig, MetricsRegistry, OpenLoopHarness,
+                           SLOTarget, SLOTracker,
+                           validate_registry_snapshot)
+    from repro.serve.concurrent import ConcurrentServeScheduler
+
+    smoke = bool(int(os.environ.get("FIG_SERVE_SMOKE", "0")))
+    if smoke:
+        n_vertices, ticks, base_rate, tenants = 256, 160, 0.25, 40
+        sweep, drain, update_every = (1, 4), 1200, 50
+    else:
+        n_vertices, ticks, base_rate, tenants = 512, 1800, 0.62, 200
+        sweep, drain, update_every = (1, 2, 4, 8, 16), 1500, 300
+
+    csr = rmat_graph(n_vertices, 5, seed=21)
+    block = 64
+    n_groups = -(-csr.n // block)
+    cfg = LoadgenConfig(seed=33, ticks=ticks, base_rate=base_rate,
+                        burst_amplitude=0.6, burst_period=max(ticks // 4, 1),
+                        n_tenants=tenants, update_every=update_every)
+    targets = [SLOTarget(family="*", p99_latency_steps=600.0,
+                         deadline_steps=1000.0)]
+    curve = {}
+    last = None
+    for max_running in sweep:
+        sess = GraphSession(csr, block, capacity=max(4, max_running),
+                            seed=0)
+        slo = SLOTracker(targets=targets, window=512)
+        sched = ConcurrentServeScheduler(n_groups, batch_budget=max_running,
+                                         seed=5, slo=slo)
+        h = OpenLoopHarness(sess, sched, cfg, max_running=max_running,
+                            drain_ticks=drain)
+        t0 = time.perf_counter()
+        s = h.run()
+        wall = time.perf_counter() - t0
+        if not smoke:
+            assert s["arrivals"] >= 1000, s["arrivals"]
+        curve[max_running] = s["throughput_per_tick"]
+        last = (sched, slo, s)
+        lat = s["latency_ticks"]
+        row(f"fig_serve_p{max_running}", wall * 1e6 / max(s["ticks"], 1),
+            max_running=max_running, arrivals=s["arrivals"],
+            admitted=s["admitted"], completed=s["completed"],
+            ticks=s["ticks"], supersteps=s["supersteps"],
+            p50_latency_ticks=round(lat["p50"], 6),
+            p99_latency_ticks=round(lat["p99"], 6),
+            throughput_per_tick=s["throughput_per_tick"],
+            latency_by_family={
+                fam: {"p50": round(v["p50"], 6), "p99": round(v["p99"], 6),
+                      "count": v["count"]}
+                for fam, v in s["latency_by_family"].items()},
+            wall_s=round(wall, 3),
+            tile_loads=s["counters"]["tile_loads"],
+            tile_pair_loads=s["counters"]["tile_pair_loads"],
+            halo_bytes=s["counters"]["halo_bytes"],
+            host_syncs=s["counters"]["host_syncs"],
+            updates_applied=s["updates_applied"])
+    # open loop delivers the trade-off: more inter-job parallelism must
+    # not reduce completions on the same offered load
+    ms = sorted(curve)
+    assert curve[ms[-1]] >= curve[ms[0]], curve
+    sched, slo, s = last
+    registry = MetricsRegistry()
+    registry.register("serve", sched.metrics)
+    registry.register("slo", slo)
+    registry.register("loadgen", s)
+    registry.register("sweep", {"throughput_per_tick_by_parallelism":
+                                {str(k): v for k, v in curve.items()}})
+    doc = registry.snapshot()
+    validate_registry_snapshot(doc)
+    if _JSON_DIR:
+        path = os.path.join(_JSON_DIR, "REGISTRY_fig_serve.json")
+        registry.export(path)
+        print(f"wrote {path}", flush=True)
+
+
 MODES = {
     "fig4_5_memory_redundancy": fig4_5_memory_redundancy,
     "fig_convergence": fig_convergence,
@@ -805,6 +907,7 @@ MODES = {
     "fig_stream": fig_stream,
     "fig_graphscale": fig_graphscale,
     "fig_trace": fig_trace,
+    "fig_serve": fig_serve,
 }
 
 

@@ -1,0 +1,95 @@
+"""SLO observability for the serve front, end to end.
+
+The paper serves CONCURRENT graph queries; an operator running that serve
+front needs to know whether it is inside its latency targets under real
+traffic.  This example wires the whole observability stack together:
+
+  * `repro.obs.loadgen` generates a seeded open-loop arrival schedule
+    (Poisson base rate, diurnal bursts, tenants pinned to algorithm
+    families) and `OpenLoopHarness` drives a shared `GraphSession` +
+    `ConcurrentServeScheduler` through it, interleaving live graph
+    updates;
+  * `SLOTracker` judges sliding-window p50/p99 latency, throughput and
+    per-request deadlines against declared `SLOTarget`s;
+  * `MetricsRegistry` snapshots every source to schema-validated JSON
+    and Prometheus text exposition.
+
+Everything is deterministic under the seeds: rerun it and the admission
+and completion sequences are bit-identical — which is exactly what lets
+`benchmarks/run.py fig_serve` commit this trajectory and
+`python -m repro.obs.regress` gate PRs against it.
+
+  PYTHONPATH=src python examples/serve_slo.py
+"""
+
+from repro.core import GraphSession
+from repro.graph import rmat_graph
+from repro.obs import (LoadgenConfig, MetricsRegistry, OpenLoopHarness,
+                       SLOTarget, SLOTracker, validate_registry_snapshot)
+from repro.serve.concurrent import ConcurrentServeScheduler
+
+
+def main():
+    csr = rmat_graph(512, 6, seed=1)
+    block = 64
+    n_blocks = -(-csr.n // block)
+    print(f"graph: {csr.n} vertices, {csr.nnz} edges, {n_blocks} blocks")
+
+    # 1. declare objectives: sssp is latency-critical, everything else
+    #    just has a loose deadline
+    slo = SLOTracker(targets=[
+        SLOTarget(family="sssp", p99_latency_steps=400,
+                  deadline_steps=600),
+        SLOTarget(family="*", deadline_steps=1200),
+    ], window=256)
+
+    sess = GraphSession(csr, block, capacity=6, seed=0)
+    sched = ConcurrentServeScheduler(n_blocks, batch_budget=6, seed=5,
+                                     slo=slo)
+
+    # 2. open-loop traffic: ~0.4 req/tick with diurnal bursts across 60
+    #    tenants, one UpdateBatch of live edge mutations every 80 ticks
+    cfg = LoadgenConfig(seed=17, ticks=400, base_rate=0.4,
+                        burst_amplitude=0.6, n_tenants=60,
+                        update_every=80)
+    harness = OpenLoopHarness(sess, sched, cfg, max_running=6)
+    summary = harness.run()
+    print(f"\n{summary['arrivals']} arrivals -> "
+          f"{summary['completed']} completed in {summary['ticks']} ticks "
+          f"({summary['supersteps']} shared supersteps, "
+          f"{summary['updates_applied']} update batches)")
+    lat = summary["latency_ticks"]
+    print(f"latency (ticks): p50={lat['p50']:.0f} p99={lat['p99']:.0f}")
+
+    # 3. the SLO verdicts
+    report = slo.report()
+    print(f"\nwindowed throughput: {report['throughput_per_step']} "
+          f"completions/step; deadline violations: "
+          f"{report['deadline_violations_total']}")
+    for fam, entry in sorted(report["families"].items()):
+        verdict = entry.get("slo")
+        state = ("n/a" if verdict is None
+                 else "OK" if verdict["ok"] else "VIOLATED")
+        print(f"  {fam:10s} p50={entry['latency_steps']['p50']:7.1f} "
+              f"p99={entry['latency_steps']['p99']:7.1f} "
+              f"deadline_miss={entry['deadline_violations']:3d}  "
+              f"SLO {state}")
+
+    # 4. one registry snapshot over every source
+    reg = MetricsRegistry()
+    reg.register("serve", sched.metrics)    # cumulative view
+    reg.register("slo", slo)                # sliding-window view
+    reg.register("loadgen", summary)        # the harness record
+    doc = reg.snapshot()
+    n = validate_registry_snapshot(doc)
+    print(f"\nregistry snapshot: {n} sources, schema {doc['schema']!r}")
+    prom = reg.to_prometheus()
+    sample = [ln for ln in prom.splitlines()
+              if ln.startswith("repro_slo_throughput")]
+    print("prometheus exposition sample:")
+    for ln in sample[:2]:
+        print(f"  {ln}")
+
+
+if __name__ == "__main__":
+    main()

@@ -350,18 +350,10 @@ def _run_host(policy: SchedulePolicy, sess,
         if selection is None:
             m.converged = True
             break
-        if series is not None:
-            series.append(
-                active_jobs=sum(int(a.sum()) for a in actives),
-                tile_loads=int(selection.tile_loads),
-                job_block_pushes=int(selection.job_block_pushes),
-                gq_occupancy=_selection_occupancy(selection),
-                dirty_blocks=dirty_n,
-                unconverged=[int(np.sum(nu)) for nu in node_un],
-                max_residual=resids)
         # a fully-converged group is never pushed (matches the solo
         # session, which stops outright; for plus-times this also keeps
         # sub-tolerance residual mass where convergence left it)
+        pair_step = 0
         with _profiler_span(sess, "superstep.push"):
             if selection.shared:
                 sel = jnp.asarray(selection.sel)
@@ -371,8 +363,7 @@ def _run_host(policy: SchedulePolicy, sess,
                 for gi, g in enumerate(groups):
                     if not actives[gi].any():
                         continue
-                    m.tile_pair_loads += int(
-                        nnz_host[gi][sel_np][on_np].sum())
+                    pair_step += int(nnz_host[gi][sel_np][on_np].sum())
                     g.values, g.deltas = sess._push_shared_fn(g)(
                         g.values, g.deltas, g.graph.tiles, g.graph.nbr_ids,
                         sel, msk, g.push_scale, g.overlay, grp_pairs[gi])
@@ -382,8 +373,7 @@ def _run_host(policy: SchedulePolicy, sess,
                         continue
                     sel_np = np.asarray(selection.sel[gi])
                     on_np = np.asarray(selection.msk[gi]) > 0
-                    m.tile_pair_loads += int(
-                        (nnz_host[gi][sel_np] * on_np).sum())
+                    pair_step += int((nnz_host[gi][sel_np] * on_np).sum())
                     args = (g.values, g.deltas, g.graph.tiles,
                             g.graph.nbr_ids,
                             jnp.asarray(selection.sel[gi]),
@@ -392,10 +382,24 @@ def _run_host(policy: SchedulePolicy, sess,
                     if mesh2d is not None:   # 2D push needs the pair view
                         args = args + (grp_pairs[gi],)
                     g.values, g.deltas = sess._push_indep_fn(g)(*args)
+        m.tile_pair_loads += pair_step
+        halo_step = 0.0
         if mesh2d is not None:
             from repro.dist.mesh2d import host_halo_bytes
-            m.halo_bytes += host_halo_bytes(mesh2d, groups, selection,
-                                            actives)
+            halo_step = host_halo_bytes(mesh2d, groups, selection, actives)
+            m.halo_bytes += halo_step
+        if series is not None:
+            # everything but pair_step/halo_step is a pre-push read; the
+            # row is appended post-push only so those two can join it
+            series.append(
+                active_jobs=sum(int(a.sum()) for a in actives),
+                tile_loads=int(selection.tile_loads),
+                job_block_pushes=int(selection.job_block_pushes),
+                gq_occupancy=_selection_occupancy(selection),
+                dirty_blocks=dirty_n,
+                unconverged=[int(np.sum(nu)) for nu in node_un],
+                max_residual=resids,
+                tile_pair_loads=pair_step, halo_bytes=halo_step)
         m.supersteps += 1
         # dtype contract: host selections carry python ints (coerced once)
         m.tile_loads += int(selection.tile_loads)
@@ -485,26 +489,6 @@ def build_device_step(policy: SchedulePolicy, sess):
         selection = policy.device_select(
             node_uns, p_means, actives, jax.random.fold_in(key, it),
             q=q, alpha=alpha, samples=samples, num_blocks=bn)
-        if tel_cap:
-            # the per-superstep series rides the carry: int32 rows written
-            # at min(it, cap-1); pure reads of the pre-push state, so the
-            # push math — and the fixpoint — is bitwise telemetry-off
-            idx = jnp.minimum(it, tel_cap - 1)
-            if selection.shared:
-                occ = jnp.sum(selection.msk > 0).astype(jnp.int32)
-            else:
-                occ = sum(jnp.sum(msk > 0).astype(jnp.int32)
-                          for msk in selection.msk)
-            tel = device_write(
-                tel, idx,
-                sum(jnp.sum(a.astype(jnp.int32)) for a in actives),
-                selection.tile_loads, selection.job_block_pushes, occ,
-                jnp.sum(boost > 0).astype(jnp.int32),
-                jnp.stack([jnp.sum(nu).astype(jnp.int32)
-                           for nu in node_uns]),
-                jnp.stack([jnp.max(algs[gi].vertex_priority(vs[gi],
-                                                            ds[gi]))
-                           for gi in range(n_groups)]))
         new_vs, new_ds, new_iters = [], [], []
         pair_step = jnp.float32(0)
         for gi in range(n_groups):
@@ -532,6 +516,28 @@ def build_device_step(policy: SchedulePolicy, sess):
             new_iters.append(iters[gi] + actives[gi].astype(jnp.int32))
             pair_step = pair_step + (keep.astype(jnp.float32)
                                      * pair_cnt.astype(jnp.float32))
+        if tel_cap:
+            # the per-superstep series rides the carry: int32 rows written
+            # at min(it, cap-1); pure reads of the pre-push state plus the
+            # push loop's pair_step, so the push math — and the fixpoint —
+            # is bitwise telemetry-off
+            idx = jnp.minimum(it, tel_cap - 1)
+            if selection.shared:
+                occ = jnp.sum(selection.msk > 0).astype(jnp.int32)
+            else:
+                occ = sum(jnp.sum(msk > 0).astype(jnp.int32)
+                          for msk in selection.msk)
+            tel = device_write(
+                tel, idx,
+                sum(jnp.sum(a.astype(jnp.int32)) for a in actives),
+                selection.tile_loads, selection.job_block_pushes, occ,
+                jnp.sum(boost > 0).astype(jnp.int32),
+                jnp.stack([jnp.sum(nu).astype(jnp.int32)
+                           for nu in node_uns]),
+                jnp.stack([jnp.max(algs[gi].vertex_priority(vs[gi],
+                                                            ds[gi]))
+                           for gi in range(n_groups)]),
+                tile_pair_loads=pair_step.astype(jnp.int32))
         # dtype contract: device selections carry int32 scalars; the carry
         # accumulates in float32 (int32 would wrap on billion-push runs,
         # float32 only rounds past 2^24)

@@ -685,7 +685,9 @@ class GraphSession:
                     "tile_loads": int(tel.tile_loads[i]),
                     "job_block_pushes": int(tel.job_block_pushes[i]),
                     "gq_occupancy": int(tel.gq_occupancy[i]),
-                    "dirty_blocks": int(tel.dirty_blocks[i])}
+                    "dirty_blocks": int(tel.dirty_blocks[i]),
+                    "tile_pair_loads": int(tel.tile_pair_loads[i]),
+                    "halo_bytes": float(tel.halo_bytes[i])}
             self.trace.counter("telemetry", vals, ts_us=ts)
             for gi in range(tel.num_groups):
                 self.trace.counter(

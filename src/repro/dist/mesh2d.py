@@ -709,23 +709,6 @@ def build_device_step_2d(policy, sess, spec: Mesh2DSpec):
             sel_pushes = tile_loads
             shared = False
 
-        if tel_cap:
-            idx = jnp.minimum(it, tel_cap - 1)
-            occ = (jnp.sum(msks[0] > 0).astype(jnp.int32) if shared
-                   else tile_loads.astype(jnp.int32))
-            tel = device_write(
-                tel, idx,
-                sum(n_lives).astype(jnp.int32),
-                tile_loads.astype(jnp.int32),
-                sel_pushes.astype(jnp.int32), occ,
-                jnp.sum(boost > 0).astype(jnp.int32),
-                jnp.stack([_sum_unique(jnp.sum(node_uns[gi]), lays[gi],
-                                       ja, ba).astype(jnp.int32)
-                           for gi in range(n_groups)]),
-                jnp.stack([jax.lax.pmax(jax.lax.pmax(
-                    jnp.max(algs[gi].vertex_priority(vs[gi], ds[gi])), ja),
-                    ba) for gi in range(n_groups)]))
-
         # -- exchange + per-shard pair runs --------------------------------
         new_vs, new_ds, new_iters, new_errs = [], [], [], []
         pair_step = jnp.float32(0)
@@ -773,6 +756,27 @@ def build_device_step_2d(policy, sess, spec: Mesh2DSpec):
                 halo_step = halo_step + keep.astype(jnp.float32) * payload
         if mode == "two" and any_bs:
             halo_step = halo_step + 8.0 * bn   # [B_N] pri + head psum
+        if tel_cap:
+            # written AFTER the exchange loop so the row carries the
+            # superstep's real pair/halo traffic alongside the pre-push
+            # scheduling reads
+            idx = jnp.minimum(it, tel_cap - 1)
+            occ = (jnp.sum(msks[0] > 0).astype(jnp.int32) if shared
+                   else tile_loads.astype(jnp.int32))
+            tel = device_write(
+                tel, idx,
+                sum(n_lives).astype(jnp.int32),
+                tile_loads.astype(jnp.int32),
+                sel_pushes.astype(jnp.int32), occ,
+                jnp.sum(boost > 0).astype(jnp.int32),
+                jnp.stack([_sum_unique(jnp.sum(node_uns[gi]), lays[gi],
+                                       ja, ba).astype(jnp.int32)
+                           for gi in range(n_groups)]),
+                jnp.stack([jax.lax.pmax(jax.lax.pmax(
+                    jnp.max(algs[gi].vertex_priority(vs[gi], ds[gi])), ja),
+                    ba) for gi in range(n_groups)]),
+                tile_pair_loads=pair_step.astype(jnp.int32),
+                halo_bytes=halo_step)
         return (it + 1, tuple(new_vs), tuple(new_ds),
                 loads + tile_loads, pushes + sel_pushes,
                 pair_loads + pair_step, tuple(new_iters),

@@ -99,7 +99,7 @@ class ServeMetrics:
             "wait_s": self.wait_s.summary(),
             "service_s": self.service_s.summary(),
             "wait_steps_by_stream": {
-                sid: st.summary()
+                str(sid): st.summary()
                 for sid, st in sorted(self.wait_steps_by_stream.items())},
             "queue_depth_by_family": {
                 fam: {"mean": float(np.mean(d)) if d else 0.0,

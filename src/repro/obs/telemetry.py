@@ -9,6 +9,10 @@ residuals evolve, where a live update batch re-ignites work.  A
   active_jobs       [K]    jobs with pending work this superstep
   tile_loads        [K]    adjacency-block stagings this superstep
   job_block_pushes  [K]    (job, block) processing events this superstep
+  tile_pair_loads   [K]    nonzero block-pair stagings this superstep (the
+                           CAJS sharing denominator; see RunMetrics)
+  halo_bytes        [K]    frontier bytes exchanged across block shards this
+                           superstep (0 off the 2D mesh)
   gq_occupancy      [K]    staged-selection occupancy (shared policies:
                            global-queue length <= q; independent: total
                            per-job queue entries)
@@ -48,7 +52,8 @@ __all__ = ["TelemetryConfig", "TelemetrySeries", "HostSeriesBuilder",
 
 # the fixed schema: per-superstep scalars ...
 SERIES_FIELDS = ("active_jobs", "tile_loads", "job_block_pushes",
-                 "gq_occupancy", "dirty_blocks")
+                 "gq_occupancy", "dirty_blocks", "tile_pair_loads",
+                 "halo_bytes")
 # ... and per-(superstep, view-group) columns
 GROUP_FIELDS = ("unconverged", "max_residual")
 
@@ -98,6 +103,8 @@ class TelemetrySeries:
     job_block_pushes: np.ndarray   # [K] int64
     gq_occupancy: np.ndarray       # [K] int64
     dirty_blocks: np.ndarray       # [K] int64
+    tile_pair_loads: np.ndarray    # [K] int64
+    halo_bytes: np.ndarray         # [K] float64
     unconverged: np.ndarray        # [K, G] int64
     max_residual: np.ndarray       # [K, G] float32
     truncated: bool = False        # device buffer overflowed (capacity < K)
@@ -117,6 +124,7 @@ class TelemetrySeries:
              "truncated": self.truncated}
         for f in SERIES_FIELDS:
             d[f] = getattr(self, f).tolist()
+        d["halo_bytes"] = [round(float(x), 6) for x in self.halo_bytes]
         d["unconverged"] = self.unconverged.tolist()
         d["max_residual"] = [[round(float(x), 8) for x in row]
                              for row in self.max_residual]
@@ -133,17 +141,19 @@ class HostSeriesBuilder:
     def append(self, active_jobs: int, tile_loads: int,
                job_block_pushes: int, gq_occupancy: int, dirty_blocks: int,
                unconverged: Sequence[int],
-               max_residual: Sequence[float]) -> None:
+               max_residual: Sequence[float],
+               tile_pair_loads: int = 0, halo_bytes: float = 0.0) -> None:
         self._rows.append((int(active_jobs), int(tile_loads),
                            int(job_block_pushes), int(gq_occupancy),
                            int(dirty_blocks),
+                           int(tile_pair_loads), float(halo_bytes),
                            tuple(int(u) for u in unconverged),
                            tuple(float(r) for r in max_residual)))
 
     def build(self) -> TelemetrySeries:
         g = len(self.view_keys)
         k = len(self._rows)
-        cols = list(zip(*self._rows)) if k else [()] * 7
+        cols = list(zip(*self._rows)) if k else [()] * 9
         return TelemetrySeries(
             view_keys=self.view_keys,
             active_jobs=np.asarray(cols[0], dtype=np.int64),
@@ -151,8 +161,10 @@ class HostSeriesBuilder:
             job_block_pushes=np.asarray(cols[2], dtype=np.int64),
             gq_occupancy=np.asarray(cols[3], dtype=np.int64),
             dirty_blocks=np.asarray(cols[4], dtype=np.int64),
-            unconverged=np.asarray(cols[5], dtype=np.int64).reshape(k, g),
-            max_residual=np.asarray(cols[6], dtype=np.float32).reshape(k, g))
+            tile_pair_loads=np.asarray(cols[5], dtype=np.int64),
+            halo_bytes=np.asarray(cols[6], dtype=np.float64),
+            unconverged=np.asarray(cols[7], dtype=np.int64).reshape(k, g),
+            max_residual=np.asarray(cols[8], dtype=np.float32).reshape(k, g))
 
 
 # ---------------------------------------------------------------------------
@@ -168,25 +180,29 @@ def device_buffers(capacity: int, n_groups: int):
             z(capacity, jnp.int32),               # job_block_pushes
             z(capacity, jnp.int32),               # gq_occupancy
             z(capacity, jnp.int32),               # dirty_blocks
+            z(capacity, jnp.int32),               # tile_pair_loads
+            z(capacity, jnp.float32),             # halo_bytes
             z((capacity, n_groups), jnp.int32),   # unconverged
             z((capacity, n_groups), jnp.float32))  # max_residual
 
 
 def device_write(bufs, idx, active_jobs, tile_loads, job_block_pushes,
-                 gq_occupancy, dirty_blocks, unconverged, max_residual):
+                 gq_occupancy, dirty_blocks, unconverged, max_residual,
+                 tile_pair_loads=0, halo_bytes=0.0):
     """Write superstep `idx`'s row (traced; idx pre-clamped by the caller).
 
     Overflow rows alias the LAST slot (`.set` keeps the newest write), so
     a truncated series still ends at the run's final state.
     """
-    a, t, p, o, d, u, r = bufs
+    a, t, p, o, d, pl, h, u, r = bufs
     scalars = (active_jobs, tile_loads, job_block_pushes, gq_occupancy,
-               dirty_blocks)
-    a, t, p, o, d = (b.at[idx].set(jnp.asarray(v, jnp.int32))
-                     for b, v in zip((a, t, p, o, d), scalars))
+               dirty_blocks, tile_pair_loads)
+    a, t, p, o, d, pl = (b.at[idx].set(jnp.asarray(v, jnp.int32))
+                         for b, v in zip((a, t, p, o, d, pl), scalars))
+    h = h.at[idx].set(jnp.asarray(halo_bytes, jnp.float32))
     u = u.at[idx].set(jnp.asarray(unconverged, jnp.int32))
     r = r.at[idx].set(jnp.asarray(max_residual, jnp.float32))
-    return (a, t, p, o, d, u, r)
+    return (a, t, p, o, d, pl, h, u, r)
 
 
 def series_from_device(bufs, supersteps: int,
@@ -194,11 +210,12 @@ def series_from_device(bufs, supersteps: int,
     """Slice the carried buffers down to the executed supersteps."""
     cap = int(bufs[0].shape[0])
     k = min(int(supersteps), cap)
-    a, t, p, o, d, u, r = (np.asarray(b)[:k] for b in bufs)
+    a, t, p, o, d, pl, h, u, r = (np.asarray(b)[:k] for b in bufs)
     return TelemetrySeries(
         view_keys=tuple(view_keys),
         active_jobs=a.astype(np.int64), tile_loads=t.astype(np.int64),
         job_block_pushes=p.astype(np.int64),
         gq_occupancy=o.astype(np.int64), dirty_blocks=d.astype(np.int64),
+        tile_pair_loads=pl.astype(np.int64), halo_bytes=h.astype(np.float64),
         unconverged=u.astype(np.int64), max_residual=r.astype(np.float32),
         truncated=int(supersteps) > cap)

@@ -68,7 +68,7 @@ class ConcurrentServeScheduler:
 
     def __init__(self, n_groups: int, batch_budget: int, *,
                  alpha: float = 0.8, seed: int = 0, backend: str = "host",
-                 metrics: bool = True, trace=None):
+                 metrics: bool = True, trace=None, slo=None):
         """backend selects where the two-level policy core computes its
         selection ("host" numpy / "device" jnp) — the SAME pluggable
         TwoLevelScheduler core as the graph engine, so the serve layer
@@ -78,7 +78,10 @@ class ConcurrentServeScheduler:
         drives a ServeMetrics with per-stream wait time, service time and
         per-family queue depth; `trace` optionally takes a
         repro.obs.TraceRecorder to share a GraphSession's trace timeline
-        (admissions land as instant events on its clock)."""
+        (admissions land as instant events on its clock); `slo` optionally
+        takes a repro.obs.SLOTracker that rides the same hooks (and the
+        same first-seen stamps) for sliding-window SLIs judged against
+        declared SLOTargets."""
         self.n_groups = n_groups
         self.batch_budget = batch_budget
         self.scheduler = TwoLevelScheduler(
@@ -92,6 +95,7 @@ class ConcurrentServeScheduler:
         self.metrics: Optional[ServeMetrics] = \
             ServeMetrics() if metrics else None
         self.trace = trace
+        self.slo = slo
         self._step_idx = 0
 
     # batch_budget is mutable between steps (schedule_step recomputes q from
@@ -141,10 +145,11 @@ class ConcurrentServeScheduler:
         from selected groups (all streams share them — CAJS) up to budget."""
         streams = [self.streams[sid] for sid in sorted(self.streams)]
         step = self._step_idx
-        if self.metrics is not None:
+        if self.metrics is not None or self.slo is not None:
+            stamp = (self.metrics or self.slo).on_seen
             for stream in streams:          # stamp first-seen (wait clock)
                 for r in stream.waiting:
-                    self.metrics.on_seen(r, step)
+                    stamp(r, step)
         node_un = np.zeros((len(streams), self.n_groups), dtype=np.float32)
         p_mean = np.zeros((len(streams), self.n_groups), dtype=np.float32)
         for i, stream in enumerate(streams):
@@ -174,6 +179,8 @@ class ConcurrentServeScheduler:
             taken[si].add(i)
             if self.metrics is not None:
                 self.metrics.on_admit(req, step)
+            if self.slo is not None:
+                self.slo.on_admit(req, streams[si].family, step)
             return len(admitted) >= self.batch_budget
 
         full = False
@@ -208,13 +215,16 @@ class ConcurrentServeScheduler:
                                             + len(taken[si]))
         self.last_admitted_by_family = by_family
         self._step_idx += 1
-        if self.metrics is not None:
+        if self.metrics is not None or self.slo is not None:
             depth: Dict[str, int] = {}      # queue pressure AFTER admission
             for stream in streams:
                 depth[stream.family] = (depth.get(stream.family, 0)
                                         + len(stream.waiting))
-            self.metrics.on_step(len(admitted), depth,
-                                 self.scheduler.last_occupancy)
+            if self.metrics is not None:
+                self.metrics.on_step(len(admitted), depth,
+                                     self.scheduler.last_occupancy)
+            if self.slo is not None:
+                self.slo.on_step(step, depth)
         if self.trace is not None:
             self.trace.instant("serve.admit", cat="serve", tid=3,
                                step=step, admitted=len(admitted),
@@ -227,3 +237,7 @@ class ConcurrentServeScheduler:
         seconds since admission, or an explicit duration)."""
         if self.metrics is not None:
             self.metrics.on_complete(req, service_s)
+        if self.slo is not None:
+            stream = self.streams.get(req.stream_id)
+            family = stream.family if stream is not None else "default"
+            self.slo.on_complete(req, family, self._step_idx)

@@ -334,7 +334,7 @@ def test_serve_metrics_percentiles_and_families():
     assert s["service_s"]["count"] == 20
     assert abs(s["service_s"]["p50"] - 0.01) < 1e-9
     assert set(s["queue_depth_by_family"]) == {"chat", "batch"}
-    assert set(s["wait_steps_by_stream"]) == {0, 1}
+    assert set(s["wait_steps_by_stream"]) == {"0", "1"}
     assert len(sched.metrics.gq_occupancy) == s["steps"]
     json.dumps(s)
 

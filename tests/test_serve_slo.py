@@ -1,0 +1,431 @@
+"""Serve-front SLO observability: loadgen, SLO tracking, registry, regress.
+
+The PR's acceptance surface:
+  * TelemetrySeries per-superstep sums reproduce RunMetrics totals
+    INCLUDING the backfilled tile_pair_loads and halo_bytes counters,
+    across all four policies x host/device/device-inf cadences;
+  * loadgen is bit-deterministic under a fixed seed — two runs produce
+    identical admission AND completion sequences;
+  * SLOTracker extends ServeMetrics/LatencyStats (shared first-seen
+    stamps, windowed percentiles, deadline violations, target verdicts);
+  * MetricsRegistry snapshots validate against the registry schema and
+    round-trip through JSON and Prometheus text exposition;
+  * the regression gate passes on the committed BENCH trajectory and
+    provably fails on a doctored >= 20% us_per_call regression.
+"""
+
+import copy
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.algorithms import PageRank, SSSP
+from repro.core import Fused, GraphSession, TwoLevel
+from repro.core.policy import AllBlocks, Independent
+from repro.graph import rmat_graph
+from repro.obs import (Arrival, LoadgenConfig, MetricsRegistry,
+                       OpenLoopHarness, REGISTRY_SCHEMA, SERIES_FIELDS,
+                       SlidingWindowLatency, SLOTarget, SLOTracker,
+                       generate_arrivals, validate_registry_snapshot)
+from repro.obs.regress import (METRIC_SPECS, compare_docs, main as
+                               regress_main, run_gate)
+from repro.serve.concurrent import ConcurrentServeScheduler, RequestStream
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CSR = rmat_graph(300, 5, seed=7)
+
+
+def _session(**kw):
+    sess = GraphSession(CSR, 32, capacity=2, seed=3, telemetry=True, **kw)
+    sess.submit(PageRank())
+    sess.submit(SSSP(source=0))
+    return sess
+
+
+# --- backfilled counters: series sums == RunMetrics totals ------------------
+
+
+@pytest.mark.parametrize("policy_cls", [TwoLevel, Independent, AllBlocks])
+@pytest.mark.parametrize("cadence", ["host", "device", "device_inf"])
+def test_series_sums_reproduce_run_totals(policy_cls, cadence):
+    """Per-superstep sums of EVERY series column — including the
+    backfilled tile_pair_loads and halo_bytes — equal the RunMetrics
+    totals, on every policy x cadence."""
+    kw = {"host": dict(), "device": dict(backend="device"),
+          "device_inf": dict(backend="device", steps_per_sync=math.inf)
+          }[cadence]
+    sess = _session()
+    m = sess.run(policy_cls(**kw), 500)
+    assert m.converged
+    tel = m.telemetry
+    assert len(tel) == m.supersteps
+    assert int(tel.tile_loads.sum()) == m.tile_loads
+    assert int(tel.job_block_pushes.sum()) == m.job_block_pushes
+    assert int(tel.tile_pair_loads.sum()) == m.tile_pair_loads
+    assert m.tile_pair_loads > 0
+    np.testing.assert_allclose(float(tel.halo_bytes.sum()), m.halo_bytes,
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_series_sums_reproduce_run_totals_fused():
+    sess = _session()
+    m = sess.run(Fused(), 500)
+    assert m.converged
+    tel = m.telemetry
+    assert int(tel.tile_pair_loads.sum()) == m.tile_pair_loads > 0
+    assert float(tel.halo_bytes.sum()) == m.halo_bytes == 0.0
+
+
+def test_new_counters_are_series_fields_and_trace_counter_tracks():
+    assert "tile_pair_loads" in SERIES_FIELDS
+    assert "halo_bytes" in SERIES_FIELDS
+    sess = _session()
+    m = sess.run(TwoLevel(), 500)
+    assert m.converged
+    tracks = [e for e in sess.trace.events
+              if e.get("ph") == "C" and e["name"] == "telemetry"]
+    assert tracks
+    assert {"tile_pair_loads", "halo_bytes"} <= set(tracks[0]["args"])
+    # the trace counter samples carry the same per-superstep values as
+    # the series, so their sums reproduce the run totals too
+    assert sum(e["args"]["tile_pair_loads"]
+               for e in tracks) == m.tile_pair_loads
+    # to_dict carries the new columns for exporters
+    td = m.telemetry.to_dict()
+    assert sum(td["tile_pair_loads"]) == m.tile_pair_loads
+    assert "halo_bytes" in td
+
+
+# --- loadgen ----------------------------------------------------------------
+
+
+def _world(seed=11, ticks=90, max_running=3, update_every=30):
+    csr = rmat_graph(192, 5, seed=9)
+    sess = GraphSession(csr, 32, capacity=max(2, max_running), seed=3)
+    n_groups = -(-csr.n // 32)
+    slo = SLOTracker(targets=[SLOTarget(family="*", p99_latency_steps=500,
+                                        deadline_steps=600)], window=128)
+    sched = ConcurrentServeScheduler(n_groups, batch_budget=max_running,
+                                     seed=5, slo=slo)
+    cfg = LoadgenConfig(seed=seed, ticks=ticks, base_rate=0.25,
+                        n_tenants=30, update_every=update_every)
+    return OpenLoopHarness(sess, sched, cfg, max_running=max_running), \
+        sched, slo
+
+
+def test_generate_arrivals_is_deterministic_and_well_formed():
+    cfg = LoadgenConfig(seed=4, ticks=200, base_rate=0.8, n_tenants=50)
+    a1 = generate_arrivals(cfg, n_groups=10, n_vertices=300)
+    a2 = generate_arrivals(cfg, n_groups=10, n_vertices=300)
+    assert a1 == a2 and len(a1) > 50
+    fams = {n for n, _ in cfg.families}
+    tenant_fam = {}
+    for arr in a1:
+        assert isinstance(arr, Arrival)
+        assert 0 <= arr.tick < cfg.ticks
+        assert 0 <= arr.tenant < cfg.n_tenants
+        assert 0 <= arr.group < 10 and 0 <= arr.source < 300
+        assert arr.family in fams
+        # a tenant is pinned to ONE family for its lifetime
+        assert tenant_fam.setdefault(arr.tenant, arr.family) == arr.family
+    # a different seed reshuffles the schedule
+    a3 = generate_arrivals(LoadgenConfig(seed=5, ticks=200, base_rate=0.8,
+                                         n_tenants=50), 10, 300)
+    assert a3 != a1
+
+
+def test_loadgen_config_validation():
+    with pytest.raises(ValueError):
+        LoadgenConfig(base_rate=0.0)
+    with pytest.raises(ValueError):
+        LoadgenConfig(families=(("nope", 1.0),))
+    with pytest.raises(ValueError):
+        LoadgenConfig(families=(("sssp", -1.0),))
+
+
+def test_harness_rejects_mismatched_groups():
+    csr = rmat_graph(192, 5, seed=9)
+    sess = GraphSession(csr, 32, capacity=2, seed=3)
+    sched = ConcurrentServeScheduler(3, batch_budget=2, seed=5)
+    with pytest.raises(ValueError, match="block count"):
+        OpenLoopHarness(sess, sched, LoadgenConfig(seed=1))
+
+
+def test_loadgen_is_bit_deterministic_under_a_fixed_seed():
+    """Two identically-seeded harness runs produce identical admission
+    AND completion sequences (ticks, tenants, families, latencies)."""
+    h1, _, _ = _world()
+    s1 = h1.run()
+    h2, _, _ = _world()
+    s2 = h2.run()
+    assert h1.admission_log == h2.admission_log
+    assert h1.completion_log == h2.completion_log
+    assert s1 == s2
+    assert s1["completed"] > 0 and s1["updates_applied"] > 0
+
+
+def test_harness_closes_the_loop_through_scheduler_and_session():
+    h, sched, slo = _world(update_every=0)
+    s = h.run()
+    # every arrival was admitted and completed (the world drains)
+    assert s["admitted"] == s["completed"] == s["arrivals"] > 0
+    # ServeMetrics and SLOTracker observed the same completions
+    assert sched.metrics.service_s.summary()["count"] == s["completed"]
+    assert slo.completed == s["completed"]
+    # completions carry per-family latency
+    assert set(s["latency_by_family"]) <= {"pagerank", "ppr", "sssp",
+                                           "bfs"}
+    # the session ends empty: every handle detached
+    assert sum(g.num_active for g in h.sess.view_groups()) == 0
+
+
+def test_harness_respects_max_running():
+    """Reconstruct concurrency from the logs: admissions at tick t join
+    before completions stamped t+1 leave, so the per-tick peak is
+    cumulative admissions minus cumulative completions."""
+    h, _, _ = _world(max_running=2)
+    h.run()
+    admits = sorted(t for t, *_ in h.admission_log)
+    leaves = sorted(t for t, *_ in h.completion_log)
+    peak, ai, li = 0, 0, 0
+    for t in range(h.ticks_run + 1):
+        while ai < len(admits) and admits[ai] <= t:
+            ai += 1
+        peak = max(peak, ai - li)
+        while li < len(leaves) and leaves[li] <= t + 1:
+            li += 1
+    assert 0 < peak <= 2
+
+
+# --- SLO tracking -----------------------------------------------------------
+
+
+def test_sliding_window_latency_retention():
+    w = SlidingWindowLatency(window=4)
+    for i in range(10):
+        w.add(float(i))
+    assert w.samples == [6.0, 7.0, 8.0, 9.0]
+    assert w.summary()["count"] == 4
+    with pytest.raises(ValueError):
+        SlidingWindowLatency(window=0)
+
+
+def test_slo_tracker_windows_violations_and_verdicts():
+    t = SLOTracker(targets=[
+        SLOTarget(family="fast", p50_latency_steps=5, p99_latency_steps=8,
+                  deadline_steps=10),
+        SLOTarget(family="*", deadline_steps=100)], window=64)
+
+    class R:
+        def __init__(self, sid):
+            self.stream_id = sid
+            self._seen_step = None
+
+    # fast family: one in-deadline, one blown deadline
+    r1, r2, r3 = R(0), R(0), R(1)
+    t.on_seen(r1, 0)
+    t.on_seen(r2, 0)
+    t.on_seen(r3, 2)
+    t.on_admit(r1, "fast", 1)
+    t.on_complete(r1, "fast", 4)       # latency 4: within everything
+    t.on_complete(r2, "fast", 20)      # latency 20 > deadline 10
+    t.on_complete(r3, "slow", 30)      # latency 28 < catch-all 100
+    t.on_step(30, {"fast": 2, "slow": 0})
+    rep = t.report()
+    assert rep["completed"] == 3
+    assert rep["deadline_violations_total"] == 1
+    fast = rep["families"]["fast"]
+    assert fast["deadline_violations"] == 1
+    assert fast["latency_steps"]["count"] == 2
+    assert fast["slo"]["ok"] is False          # p99 blown by the 20
+    slow = rep["families"]["slow"]
+    assert slow["slo"]["ok"] is True           # catch-all target matched
+    assert rep["tenants"]["0"]["count"] == 2
+    # duplicate family targets are rejected
+    with pytest.raises(ValueError):
+        SLOTracker(targets=[SLOTarget(family="x"), SLOTarget(family="x")])
+
+
+def test_slo_tracker_shares_seen_stamps_with_serve_metrics():
+    """Wired through the scheduler, tracker and metrics agree on the wait
+    clock because they share the req._seen_step stamp."""
+    from repro.serve.concurrent import Request
+    slo = SLOTracker(window=16)
+    sched = ConcurrentServeScheduler(4, 2, seed=0, slo=slo)
+    st = RequestStream(0, family="chat")
+    sched.add_stream(st)
+    for g in range(4):
+        st.add(Request(0, g, 1.0, 1))
+    done = []
+    while st.waiting:
+        done += sched.schedule_step()
+    for r in done:
+        sched.complete(r)
+    assert slo.completed == 4
+    # same stamps -> identical wait-step samples in both views
+    assert sorted(sched.metrics.wait_steps.samples) == \
+        sorted(slo.wait_by_family["chat"].samples)
+    # family latency recorded under the stream's declared family
+    assert list(slo.report()["families"]) == ["chat"]
+
+
+# --- MetricsRegistry --------------------------------------------------------
+
+
+def test_registry_snapshot_validates_and_round_trips(tmp_path):
+    reg = MetricsRegistry()
+    reg.register("plain", {"a": 1, "b": {"c": [1, 2, 3]}})
+    reg.register("live", lambda: {"x": 2.5})
+    doc = reg.snapshot()
+    assert doc["schema"] == REGISTRY_SCHEMA
+    assert validate_registry_snapshot(doc) == 2
+    out = tmp_path / "snap.json"
+    exported = reg.export(out)
+    assert exported == json.loads(out.read_text())
+    assert validate_registry_snapshot(json.loads(out.read_text())) == 2
+
+
+def test_registry_accepts_the_real_sources():
+    h, sched, slo = _world(ticks=40, update_every=0)
+    s = h.run()
+    reg = MetricsRegistry()
+    reg.register("serve", sched.metrics)   # summary()
+    reg.register("slo", slo)               # report()
+    reg.register("loadgen", s)             # plain dict
+    doc = reg.snapshot()
+    assert validate_registry_snapshot(doc) == 3
+    assert doc["sources"]["slo"]["completed"] == s["completed"]
+
+
+def test_registry_rejects_bad_names_sources_and_snapshots():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.register("bad name!", {})
+    reg.register("a", {"x": 1})
+    with pytest.raises(ValueError):
+        reg.register("a", {})              # duplicate
+    with pytest.raises(TypeError):
+        reg.register("b", 42)
+        reg.snapshot()
+    reg.unregister("b")
+    # schema violations
+    with pytest.raises(ValueError, match="schema"):
+        validate_registry_snapshot({"schema": "nope", "sources": {}})
+    with pytest.raises(ValueError, match="non-JSON"):
+        validate_registry_snapshot(
+            {"schema": REGISTRY_SCHEMA,
+             "sources": {"s": {"x": object()}}})
+    with pytest.raises(ValueError, match="non-finite"):
+        validate_registry_snapshot(
+            {"schema": REGISTRY_SCHEMA,
+             "sources": {"s": {"x": float("nan")}}})
+
+
+def test_registry_prometheus_exposition():
+    reg = MetricsRegistry()
+    reg.register("serve", {"wait": {"p50": 1.5, "p99": 9.0},
+                           "ok": True, "note": "ignored",
+                           "series": [1, 2, 3]})
+    text = reg.to_prometheus()
+    lines = text.strip().splitlines()
+    assert "repro_serve_wait_p50 1.5" in lines
+    assert "repro_serve_wait_p99 9" in lines
+    assert "repro_serve_ok 1" in lines
+    assert "repro_serve_series_sum 6" in lines
+    assert "repro_serve_series_last 3" in lines
+    assert not any("note" in ln for ln in lines)
+    # every sample line is preceded by its TYPE header
+    for i, ln in enumerate(lines):
+        if not ln.startswith("#"):
+            assert lines[i - 1] == f"# TYPE {ln.split()[0]} gauge"
+
+
+# --- the regression gate ----------------------------------------------------
+
+
+def _fig_sync_doc():
+    with open(os.path.join(REPO_ROOT, "BENCH_fig_sync.json")) as f:
+        return json.load(f)
+
+
+def test_gate_passes_on_the_committed_trajectory():
+    result = run_gate(REPO_ROOT, REPO_ROOT)
+    assert result["ok"] and not result["violations"]
+    assert "fig_sync" in result["compared_modes"]
+
+
+def test_gate_fails_on_doctored_us_per_call_regression():
+    """The acceptance criterion: an injected >= 20% us_per_call
+    regression must trip the gate."""
+    base = _fig_sync_doc()
+    doctored = copy.deepcopy(base)
+    doctored["records"][0]["us_per_call"] = round(
+        base["records"][0]["us_per_call"] * 1.20, 1)
+    violations, _ = compare_docs(base, doctored)
+    assert [v.metric for v in violations] == ["us_per_call"]
+    assert violations[0].kind == "timing"
+    # counters-only mode ignores the timing wobble...
+    ok, _ = compare_docs(base, doctored, skip_timing=True)
+    assert not ok
+    # ...but still catches a counter regression exactly
+    doctored["records"][1]["tile_loads"] += 1
+    bad, _ = compare_docs(base, doctored, skip_timing=True)
+    assert [v.metric for v in bad] == ["tile_loads"]
+
+
+def test_gate_direction_lower_is_worse_for_throughput():
+    base = {"mode": "fig_serve", "records": [
+        {"name": "p4", "completed": 100, "throughput_per_tick": 0.5}]}
+    worse = {"mode": "fig_serve", "records": [
+        {"name": "p4", "completed": 90, "throughput_per_tick": 0.4}]}
+    better = {"mode": "fig_serve", "records": [
+        {"name": "p4", "completed": 120, "throughput_per_tick": 0.9}]}
+    v, _ = compare_docs(base, worse)
+    assert {x.metric for x in v} == {"completed", "throughput_per_tick"}
+    v, _ = compare_docs(base, better)
+    assert not v
+
+
+def test_gate_missing_rows_warn_unless_required():
+    base = _fig_sync_doc()
+    partial = {"mode": "fig_sync", "records": base["records"][:1]}
+    v, w = compare_docs(base, partial)
+    assert not v and any("missing" in x for x in w)
+    v, w = compare_docs(base, partial, require_all=True)
+    assert v and v[0].kind == "missing"
+
+
+def test_gate_cli_exit_codes(tmp_path):
+    # 0: self-gate on the committed records
+    assert regress_main(["--baseline", REPO_ROOT, "--modes",
+                         "fig_sync,fig_trace"]) == 0
+    # 1: doctored regression (>= 20% us_per_call) in a fresh dir
+    fresh = tmp_path / "fresh"
+    fresh.mkdir()
+    doc = _fig_sync_doc()
+    doc["records"][0]["us_per_call"] = round(
+        doc["records"][0]["us_per_call"] * 1.3, 1)
+    (fresh / "BENCH_fig_sync.json").write_text(json.dumps(doc))
+    out = tmp_path / "verdict.json"
+    assert regress_main(["--baseline", REPO_ROOT, "--fresh", str(fresh),
+                         "--modes", "fig_sync", "--json", str(out)]) == 1
+    verdict = json.loads(out.read_text())
+    assert not verdict["ok"]
+    assert verdict["violations"][0]["metric"] == "us_per_call"
+    # the same fresh dir is clean under --skip-timing
+    assert regress_main(["--baseline", REPO_ROOT, "--fresh", str(fresh),
+                         "--modes", "fig_sync", "--skip-timing"]) == 0
+    # 2: no records at all
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert regress_main(["--baseline", str(empty)]) == 2
+
+
+def test_gate_specs_cover_the_issue_metrics():
+    for metric in ("us_per_call", "tile_loads", "tile_pair_loads",
+                   "halo_bytes", "host_syncs"):
+        assert metric in METRIC_SPECS
